@@ -1,0 +1,79 @@
+"""Kernel microbenchmarks: HBM-byte and FLOP accounting for the AIDA
+kernels vs their dense equivalents (the in-memory-compression dividend),
+plus wall-clock on this host (interpret mode — correctness path, NOT TPU
+performance; the byte model is the TPU-relevant number)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse_fc as sfc
+from repro.kernels import ops, ref
+
+
+def bytes_model(n=4096, k=4096, density=0.1, log=print):
+    """Weights-at-rest and weights-moved-per-matvec for each FC mode."""
+    dense_bf16 = n * k * 2
+    rows = [
+        ("dense bf16", dense_bf16),
+        ("int8", n * k * 1),
+        ("codebook4 (packed)", n * k // 2 + 64),
+        ("acsr f32 (val+idx)", int(n * k * density) * 8),
+        ("aida (4b codes + idx)", int(n * k * density) * 5),  # 4b+32b idx
+    ]
+    log(f"FC {n}x{k}, density {density:.0%} — HBM bytes per matvec:")
+    out = {}
+    for name, b in rows:
+        log(f"  {name:24s} {b/1e6:10.2f} MB   ({dense_bf16/b:5.1f}x less"
+            f" than dense bf16)" if b else "")
+        out[name] = b
+    return out
+
+
+def wallclock(log=print):
+    rng = np.random.default_rng(0)
+    n, k, b = 1024, 2048, 8
+    w = rng.normal(size=(n, k)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(b, k)).astype(np.float32))
+    rows = []
+    for mode in sfc.MODES:
+        layer = sfc.compress(w, mode=mode, density=0.1)
+        f = jax.jit(lambda xx, l=layer: sfc.apply_fc(l, xx))
+        f(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            f(x).block_until_ready()
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append((f"fc_{mode}", us))
+        log(f"  fc_{mode:10s} {us:12.0f} us/call")
+    return rows
+
+
+def attention_bench(log=print):
+    rng = np.random.default_rng(1)
+    B, H, T, D = 1, 8, 1024, 64
+    q = jnp.asarray(rng.normal(size=(B, H, T, D)).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.normal(size=(B, H, T, D)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.normal(size=(B, H, T, D)).astype(np.float32))
+    rows = []
+    for impl in ("ref",):
+        f = jax.jit(lambda a, b_, c: ops.attention(a, b_, c, impl=impl))
+        f(q, k, v).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            f(q, k, v).block_until_ready()
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append((f"attention_{impl}", us))
+        log(f"  attention_{impl:6s} {us:12.0f} us/call  "
+            f"({4*B*H*T*T*D/ (us*1e-6) /1e9:.1f} GFLOP/s host)")
+    return rows
+
+
+if __name__ == "__main__":
+    bytes_model()
+    print("\nwall-clock (host CPU, interpret-mode kernels):")
+    wallclock()
+    attention_bench()

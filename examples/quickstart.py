@@ -1,0 +1,41 @@
+"""Quickstart: train a tiny llama-family model, checkpoint it, generate.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get, reduced
+from repro.data.pipeline import DataIterator, PipelineConfig
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.serve.engine import Request, ServeEngine
+from repro.train import trainer
+
+
+def main():
+    cfg = reduced(get("llama3-8b"), n_layers=2, d_model=128, d_ff=256,
+                  vocab=512)
+    print(f"arch: {cfg.name}  params ~{cfg.params_count()/1e6:.1f}M")
+
+    tc = trainer.TrainConfig(
+        remat="none",
+        opt=AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60))
+    data = DataIterator(cfg, PipelineConfig(seed=0, global_batch=8,
+                                            seq_len=64))
+    mgr = CheckpointManager("/tmp/repro_quickstart", keep_last=2)
+    state = trainer.run(cfg, tc, data, n_steps=40,
+                        key=jax.random.PRNGKey(0), ckpt_mgr=mgr,
+                        ckpt_every=20, log_every=10)
+    mgr.wait()
+    print(f"checkpoints: steps {mgr.list_steps()}")
+
+    eng = ServeEngine(cfg, state.params, batch_slots=2, max_len=64)
+    for rid in range(3):
+        eng.submit(Request(prompt=[1, 2 + rid, 3], max_new=8, rid=rid))
+    for r in eng.run():
+        print(f"request {r.rid}: {r.tokens}")
+
+
+if __name__ == "__main__":
+    main()

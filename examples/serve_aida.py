@@ -1,0 +1,82 @@
+"""End-to-end AIDA serving driver (the paper's use case: FC-layer inference).
+
+Pipeline: train a small model briefly → Deep-Compression (prune + 16-entry
+weight sharing, paper §3 / EIE) every projection → serve batched requests
+through the compressed decode path (Pallas ACSR/LUT kernels) → report
+compression ratio, logit fidelity and agreement vs the dense model.
+
+  PYTHONPATH=src python examples/serve_aida.py [--mode aida|codebook4|int8]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get, reduced
+from repro.data.pipeline import DataIterator, PipelineConfig
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.serve.compress import compress_params
+from repro.serve.engine import Request, ServeEngine
+from repro.train import trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="aida",
+                    choices=["int8", "codebook4", "acsr", "aida"])
+    ap.add_argument("--density", type=float, default=0.25)
+    ap.add_argument("--train-steps", type=int, default=30)
+    args = ap.parse_args()
+
+    cfg = reduced(get("llama3-8b"), n_layers=2, d_model=128, d_ff=256,
+                  vocab=512)
+    print(f"== train a {cfg.params_count()/1e6:.1f}M model "
+          f"({args.train_steps} steps) ==")
+    tc = trainer.TrainConfig(remat="none",
+                             opt=AdamWConfig(lr=3e-3, warmup_steps=5,
+                                             total_steps=args.train_steps))
+    data = DataIterator(cfg, PipelineConfig(seed=0, global_batch=8,
+                                            seq_len=64))
+    state = trainer.run(cfg, tc, data, n_steps=args.train_steps,
+                        key=jax.random.PRNGKey(0), log_every=10)
+
+    print(f"\n== Deep-Compression -> {args.mode} "
+          f"(density {args.density}) ==")
+    cparams, stats = compress_params(state.params, mode=args.mode,
+                                     density=args.density)
+    print(f"  projections compressed: {stats['n_compressed']}  "
+          f"weight-memory ratio vs bf16: {stats['ratio']:.1f}x")
+
+    print("\n== fidelity: compressed vs dense decode ==")
+    B, S = 4, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    std = M.init_decode_state(cfg, B, S + 1)
+    stc = M.init_decode_state(cfg, B, S + 1)
+    agree, err = [], []
+    for t in range(S):
+        std, ld = M.decode_step(cfg, state.params, std, toks[:, t])
+        stc, lc = M.decode_step(cfg, cparams, stc, toks[:, t])
+        agree.append(float((ld.argmax(-1) == lc.argmax(-1)).mean()))
+        err.append(float(jnp.mean(jnp.abs(ld - lc))))
+    print(f"  next-token argmax agreement: {np.mean(agree):.1%}  "
+          f"mean |logit delta|: {np.mean(err):.4f}")
+
+    print("\n== batched serving on the compressed model ==")
+    eng = ServeEngine(cfg, cparams, batch_slots=4, max_len=64)
+    for rid in range(8):
+        eng.submit(Request(prompt=[1, 2 + rid, 3, 4], max_new=8, rid=rid))
+    t0 = time.perf_counter()
+    results = eng.run()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.tokens) for r in results) + 8 * 4
+    print(f"  served {len(results)} requests, "
+          f"{n_tok/dt:.1f} tok/s (host CPU, interpret-mode kernels)")
+    for r in sorted(results, key=lambda r: r.rid)[:3]:
+        print(f"  req {r.rid}: {r.tokens}")
+
+
+if __name__ == "__main__":
+    main()

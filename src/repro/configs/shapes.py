@@ -1,0 +1,65 @@
+"""The assigned input-shape set + (arch × shape) cell admissibility.
+
+LM shapes are seq_len × global_batch.  decode_* / long_* cells lower
+`serve_step` (one token against a KV cache of seq_len); train lowers
+`train_step`; prefill lowers the forward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape: Shape) -> Tuple[bool, str]:
+    if shape.kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only: no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full attention: 500k decode skipped (DESIGN.md)"
+    return True, ""
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    from repro.configs.base import names
+    return [(a, s) for a in names() for s in SHAPES]
+
+
+def input_specs(cfg: ArchConfig, shape: Shape):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.batch, shape.seq
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            batch = {"frames": jax.ShapeDtypeStruct((b, s, cfg.audio_in_dim),
+                                                    jnp.bfloat16),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        elif cfg.frontend == "vision":
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s - cfg.n_img_tokens),
+                                                    i32),
+                     "img_embeds": jax.ShapeDtypeStruct(
+                         (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b,), i32)}

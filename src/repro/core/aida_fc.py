@@ -1,0 +1,405 @@
+"""Paper Fig. 3 — the AIDA FC-layer algorithm, executed on the AP emulator.
+
+Stages (all massively parallel across PUs = CAM rows):
+  1. activation broadcast — per nonzero activation: one fused compare+write
+     (paper lines 2–5, "lines 3 and 4 are executed in parallel"),
+  2. multiplication — bit-serial schoolbook multiply of every (W, B) pair at
+     once, each single-bit op realized by perfect induction (lines 7–12),
+  3. soft reduction — binary-tree segmented accumulation steered by the ACSR
+     row flags; odd partials are tag-Moved onto even ones and added
+     bit-serially until every '10' (last) flag merges into its '01' (first),
+     turning it '11' (lines 14–26),
+  4. activation function — ReLU: match the sign bit, write zeros (lines 28–29).
+
+Implementation elaborations beyond the paper's pseudocode (documented in
+DESIGN.md §7): two's-complement product/accumulator with explicit sign fix
+(the paper leaves signed arithmetic unspecified), a per-PU local-position
+field POS used to key the tree senders (the paper steers with the moved
+row-flag MSB; POS is precomputable at ACSR-encode time and keeps every
+controller step data-independent), and a dedicated move-receive field MV
+(the paper reuses the B field).
+
+Every step is issued through AP primitives, so `ap.counters` afterwards holds
+the exact cycle count; `aida_sim.cycles_fc` reproduces it in closed form and
+tests assert equality.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import acsr as acsr_mod
+from repro.core.associative import AP, Field, move_cycles  # noqa: F401
+
+
+@dataclasses.dataclass
+class Layout:
+    """CAM bit-column layout for one FC layer instance."""
+    flag: Field      # 2 bits: bit0 = FIRST, bit1 = LAST  ('01','10','11')
+    alive: Field     # 1 bit
+    pos: Field       # local index within the matrix-row segment
+    col_idx: Field   # column index of the nonzero weight
+    w: Field         # weight magnitude, m bits
+    w_sign: Field    # 1 bit
+    b: Field         # activation magnitude, n bits
+    b_sign: Field    # 1 bit
+    c: Field         # accumulator, two's complement, kc bits
+    mv: Field        # move-receive buffer, kc bits
+    mv_last: Field   # 1 bit: moved LAST flag
+    t: Field         # 1 bit: AND result
+    carry: Field     # 1 bit
+    scr: Field       # 1 bit: carry/bit snapshot
+    scr_a: Field     # 1 bit: addend snapshot
+    psign: Field     # 1 bit: product sign
+    total_bits: int
+
+
+def make_layout(m: int, n: int, ci_bits: int, pos_bits: int,
+                kc: int) -> Layout:
+    base = 0
+    fields = {}
+    for name, width in [("flag", 2), ("alive", 1), ("pos", pos_bits),
+                        ("col_idx", ci_bits), ("w", m), ("w_sign", 1),
+                        ("b", n), ("b_sign", 1), ("c", kc), ("mv", kc),
+                        ("mv_last", 1), ("t", 1), ("carry", 1), ("scr", 1),
+                        ("scr_a", 1), ("psign", 1)]:
+        fields[name] = Field(base, width)
+        base += width
+    return Layout(total_bits=base, **fields)
+
+
+# --------------------------------------------------------- micro-operations
+def clear_bits(ap: AP, cols) -> None:
+    """Tag all rows (empty compare mask) + parallel write zeros: 1 cycle."""
+    cols = np.atleast_1d(np.asarray(cols))
+    ap.compare_write([], [], cols, np.zeros(cols.size, np.uint8))
+
+
+def bit_and(ap: AP, dst: int, a: int, b: int) -> None:
+    """dst = a & b by perfect induction: clear + match the single 1-entry."""
+    clear_bits(ap, [dst])
+    ap.compare_write([a, b], [1, 1], [dst], [1])
+
+
+def snapshot(ap: AP, src: int, dst: int) -> None:
+    """dst = src (2 cycles: clear, conditional set)."""
+    clear_bits(ap, [dst])
+    ap.compare_write([src], [1], [dst], [1])
+
+
+def full_add(ap: AP, a: int, b: int, carry: int, scr: int, scr_a: int) -> None:
+    """(a, carry) = a + b + carry, in-place, by perfect induction.
+
+    Keys match snapshots (scr_a, b, scr) — none written — so truth-table
+    order is irrelevant.  Entries 000 and 111 are fixed points (no write).
+    10 cycles, data-independent.
+    """
+    snapshot(ap, carry, scr)
+    snapshot(ap, a, scr_a)
+    for av, bv, cv in [(0, 0, 1), (0, 1, 0), (0, 1, 1),
+                       (1, 0, 0), (1, 0, 1), (1, 1, 0)]:
+        s = av ^ bv ^ cv
+        cout = (av & bv) | (cv & (av | bv))
+        ap.compare_write([scr_a, b, scr], [av, bv, cv],
+                         [a, carry], [s, cout])
+
+
+def half_add(ap: AP, a: int, carry: int, scr: int, scr_a: int) -> None:
+    """(a, carry) = a + carry (carry ripple step). 6 cycles."""
+    snapshot(ap, carry, scr)
+    snapshot(ap, a, scr_a)
+    ap.compare_write([scr_a, scr], [0, 1], [a, carry], [1, 0])
+    ap.compare_write([scr_a, scr], [1, 1], [a, carry], [0, 1])
+
+
+# ------------------------------------------------------------- the FC layer
+def load_cam(ap: AP, lay: Layout, a: acsr_mod.ACSR,
+             w_int: np.ndarray) -> np.ndarray:
+    """DMA the ACSR image into the CAM (host-side, not cycle-counted).
+
+    Returns the per-PU local positions (for assertions only).
+    """
+    seg = np.asarray(a.seg_id)
+    flags = np.asarray(a.row_flag)
+    cols = np.asarray(a.col_idx)
+    nnz = a.nnz
+    pos = np.zeros(ap.rows, np.int64)
+    run = 0
+    for r in range(nnz):
+        if flags[r] & acsr_mod.FLAG_FIRST:
+            run = 0
+        pos[r] = run
+        run += 1
+        ap.load_field(r, lay.flag, int(flags[r]))
+        ap.load_field(r, lay.alive, 1)
+        ap.load_field(r, lay.pos, int(pos[r]))
+        ap.load_field(r, lay.col_idx, int(cols[r]))
+        wv = int(w_int[r])
+        ap.load_field(r, lay.w, abs(wv))
+        ap.load_field(r, lay.w_sign, 1 if wv < 0 else 0)
+    del seg
+    return pos
+
+
+def broadcast(ap: AP, lay: Layout, b_int: np.ndarray) -> int:
+    """Stage 1 (lines 2–5): one fused compare+write per nonzero activation."""
+    n_bits = lay.b.width
+    ci = lay.col_idx.width
+    nnz_b = 0
+    for idx in range(b_int.shape[0]):
+        val = int(b_int[idx])
+        if val == 0:
+            continue  # sparsity: zero activations are never broadcast
+        nnz_b += 1
+        key = [(idx >> k) & 1 for k in range(ci)]
+        bits = [(abs(val) >> k) & 1 for k in range(n_bits)]
+        bits.append(1 if val < 0 else 0)
+        ap.compare_write(lay.col_idx.cols(), key,
+                         np.concatenate([lay.b.cols(), lay.b_sign.cols()]),
+                         bits)
+    return nnz_b
+
+
+def multiply(ap: AP, lay: Layout) -> None:
+    """Stage 2 (lines 7–12): bit-serial W×B into C, all PUs in parallel."""
+    m, n, kc = lay.w.width, lay.b.width, lay.c.width
+    t, carry = lay.t.col(0), lay.carry.col(0)
+    scr, scr_a = lay.scr.col(0), lay.scr_a.col(0)
+    for j in range(n):
+        for i in range(m):
+            bit_and(ap, t, lay.w.col(i), lay.b.col(j))
+            full_add(ap, lay.c.col(i + j), t, carry, scr, scr_a)
+        # worst-case (data-independent) carry ripple to the product top bit
+        for p in range(j + m, m + n):
+            half_add(ap, lay.c.col(p), carry, scr, scr_a)
+    # sign fix: psign = w_sign XOR b_sign; negate C on negative products
+    ps = lay.psign.col(0)
+    clear_bits(ap, [ps])
+    ap.compare_write([lay.w_sign.col(0), lay.b_sign.col(0)], [1, 0], [ps], [1])
+    ap.compare_write([lay.w_sign.col(0), lay.b_sign.col(0)], [0, 1], [ps], [1])
+    for bpos in range(kc):  # bitwise NOT on tagged rows (4 cycles/bit)
+        cb = lay.c.col(bpos)
+        snapshot(ap, cb, scr)
+        ap.compare_write([ps, scr], [1, 0], [cb], [1])
+        ap.compare_write([ps, scr], [1, 1], [cb], [0])
+    clear_bits(ap, [t])                       # +1 via T column
+    ap.compare_write([ps], [1], [t], [1])
+    full_add(ap, lay.c.col(0), t, carry, scr, scr_a)
+    for p in range(1, kc):
+        half_add(ap, lay.c.col(p), carry, scr, scr_a)
+    clear_bits(ap, [carry])
+
+
+def soft_reduction(ap: AP, lay: Layout) -> int:
+    """Stage 3 (lines 14–26): segmented binary-tree accumulation.
+
+    Returns the number of rounds executed (paper: do-while any '10' alive).
+    """
+    kc = lay.c.width
+    t_col, carry = lay.t.col(0), lay.carry.col(0)
+    scr, scr_a = lay.scr.col(0), lay.scr_a.col(0)
+    del t_col
+    rounds = 0
+    while True:
+        d = 1 << rounds
+        # sender key: POS ≡ 2^t (mod 2^{t+1}) and ALIVE
+        pos_cols = lay.pos.cols(0, min(rounds + 1, lay.pos.width))
+        pos_key = [0] * (len(pos_cols) - 1) + [1] if len(pos_cols) > rounds \
+            else [0] * len(pos_cols)
+        sender_cols = np.concatenate([pos_cols, lay.alive.cols()])
+        sender_key = np.array(pos_key + [1], np.uint8)
+
+        clear_bits(ap, np.concatenate([lay.mv.cols(), lay.mv_last.cols()]))
+        # per-bit: tag sender bits, shift tags up by d, deposit into MV
+        move_srcs = [(lay.c.col(bpos), lay.mv.col(bpos)) for bpos in range(kc)]
+        move_srcs.append((lay.flag.col(1), lay.mv_last.col(0)))  # LAST flag
+        for src, dst in move_srcs:
+            ap.compare(np.concatenate([sender_cols, [src]]),
+                       np.concatenate([sender_key, [1]]))
+            ap.move_by("up", d)
+            ap.write([dst], [1])
+        # receivers accumulate: C += MV  (runs on all PUs; MV=0 elsewhere)
+        for bpos in range(kc):
+            full_add(ap, lay.c.col(bpos), lay.mv.col(bpos), carry, scr, scr_a)
+        clear_bits(ap, [carry])
+        # fold the moved LAST flag: '01' head that received it becomes '11'
+        ap.compare_write(lay.mv_last.cols(), [1], [lay.flag.col(1)], [1])
+        # senders die
+        ap.compare_write(sender_cols, sender_key, lay.alive.cols(), [0])
+        rounds += 1
+        # completion check (lines 25–26): any ALIVE row still flagged '10'?
+        ap.compare([lay.flag.col(0), lay.flag.col(1), lay.alive.col(0)],
+                   [0, 1, 1])
+        if not ap.if_match():
+            return rounds
+
+
+def relu(ap: AP, lay: Layout) -> None:
+    """Stage 4 (lines 28–29): match sign bit, write zeros. One fused cycle."""
+    kc = lay.c.width
+    ap.compare_write([lay.c.col(kc - 1)], [1],
+                     lay.c.cols(), np.zeros(kc, np.uint8))
+
+
+# ---------------------------------------------------- coded (bit-parallel)
+def multiply_coded(ap: AP, lay: Layout, cents_w: np.ndarray,
+                   cents_a: np.ndarray) -> int:
+    """Bit-parallel perfect induction (§3): traverse all multiplier×
+    multiplicand code combinations, substitute precomputed products.
+
+    One fused compare+write per (w_code, a_code) pair — for 4-bit codebooks
+    that is 15×15 = 225 cycles for the ENTIRE multiplication stage,
+    independent of nnz. Code 0 is the structural zero (product 0 = the
+    preloaded C), so zero combos are skipped. Returns cycles spent.
+    """
+    cw_bits, ca_bits = lay.w.width, lay.b.width
+    kc = lay.c.width
+    cycles = 0
+    for wc in range(1, 1 << cw_bits):
+        for ac in range(1, 1 << ca_bits):
+            prod = int(cents_w[wc]) * int(cents_a[ac])
+            bits = [(prod >> k) & 1 for k in range(kc)]  # 2's complement
+            key_w = [(wc >> k) & 1 for k in range(cw_bits)]
+            key_a = [(ac >> k) & 1 for k in range(ca_bits)]
+            ap.compare_write(
+                np.concatenate([lay.w.cols(), lay.b.cols()]),
+                key_w + key_a, lay.c.cols(), bits)
+            cycles += 1
+    return cycles
+
+
+def aida_fc_layer_coded(w_codes: np.ndarray, b_codes: np.ndarray,
+                        cents_w: np.ndarray, cents_a: np.ndarray,
+                        activation: Optional[str] = "relu",
+                        block: int = 1) -> "FCResult":
+    """Coded-mode FC layer: 4-bit weight/activation codes, product LUT.
+
+    w_codes: [N, K] uint (0 = structural zero), cents_w/cents_a: integer
+    codebooks with cents[0] == 0.  This is AIDA's compressed-network
+    configuration (the one benchmarked in Table 1).
+    """
+    w_codes = np.asarray(w_codes, dtype=np.int64)
+    b_codes = np.asarray(b_codes, dtype=np.int64)
+    cents_w = np.asarray(cents_w, dtype=np.int64)
+    cents_a = np.asarray(cents_a, dtype=np.int64)
+    assert cents_w[0] == 0 and cents_a[0] == 0, "code 0 is the structural zero"
+    n_rows, n_cols = w_codes.shape
+    cw_bits = max(1, math.ceil(math.log2(len(cents_w))))
+    ca_bits = max(1, math.ceil(math.log2(len(cents_a))))
+
+    a = acsr_mod.encode(w_codes.astype(np.float64), block=block)
+    seg = np.asarray(a.seg_id)[: a.nnz]
+    row_nnz = np.bincount(seg, minlength=n_rows) if a.nnz else np.zeros(n_rows)
+    max_row_nnz = int(row_nnz.max(initial=1)) or 1
+    pmax = int(np.abs(np.outer(cents_w, cents_a)).max())
+    prod_bits = max(1, math.ceil(math.log2(pmax + 1)))
+    acc_bits = max(0, math.ceil(math.log2(max_row_nnz))) if max_row_nnz > 1 else 0
+    kc = prod_bits + acc_bits + 1
+    pos_bits = max(1, math.ceil(math.log2(max_row_nnz))) if max_row_nnz > 1 else 1
+    ci_bits = max(1, math.ceil(math.log2(max(n_cols, 2))))
+
+    lay = make_layout(cw_bits, ca_bits, ci_bits, pos_bits, kc)
+    ap = AP(rows=a.nnz_pad, bits=lay.total_bits)
+    codes = np.zeros(ap.rows, np.int64)
+    codes[: a.nnz] = np.asarray(a.values)[: a.nnz].astype(np.int64)
+    load_cam(ap, lay, a, codes)  # loads |code| into W field (codes ≥ 0)
+
+    nnz_b = broadcast(ap, lay, b_codes)  # writes b codes into the B field
+    multiply_coded(ap, lay, cents_w, cents_a)
+    rounds = soft_reduction(ap, lay)
+    if activation == "relu":
+        relu(ap, lay)
+
+    out = np.zeros(n_rows, np.int64)
+    flags = np.asarray(a.row_flag)[: a.nnz]
+    segs = np.asarray(a.seg_id)[: a.nnz]
+    for r in range(a.nnz):
+        if flags[r] & acsr_mod.FLAG_FIRST:
+            out[segs[r]] = ap.read_field(r, lay.c, signed=True)
+    return FCResult(out=out, cycles=ap.counters["cycles"], rounds=rounds,
+                    nnz_b=nnz_b, counters=dict(ap.counters), layout=lay,
+                    max_row_nnz=max_row_nnz)
+
+
+def fc_reference_coded(w_codes, b_codes, cents_w, cents_a,
+                       activation: Optional[str] = "relu") -> np.ndarray:
+    w = np.asarray(cents_w)[np.asarray(w_codes, np.int64)]
+    b = np.asarray(cents_a)[np.asarray(b_codes, np.int64)]
+    out = w.astype(np.int64) @ b.astype(np.int64)
+    if activation == "relu":
+        out = np.maximum(out, 0)
+    return out
+
+
+# ------------------------------------------------------------------ driver
+@dataclasses.dataclass
+class FCResult:
+    out: np.ndarray            # [n_rows] int64 output activations
+    cycles: int
+    rounds: int
+    nnz_b: int
+    counters: dict
+    layout: Layout
+    max_row_nnz: int
+
+
+def aida_fc_layer(w_int: np.ndarray, b_int: np.ndarray, m: int, n: int,
+                  activation: Optional[str] = "relu",
+                  block: int = 1) -> FCResult:
+    """Run one FC layer C = f(W×B) through the emulator.
+
+    w_int: [N, K] integer weight matrix (|w| < 2^m), b_int: [K] (|b| < 2^n).
+    """
+    w_int = np.asarray(w_int, dtype=np.int64)
+    b_int = np.asarray(b_int, dtype=np.int64)
+    n_rows, n_cols = w_int.shape
+    assert np.abs(w_int).max(initial=0) < (1 << m)
+    assert np.abs(b_int).max(initial=0) < (1 << n)
+
+    a = acsr_mod.encode(w_int.astype(np.float64), block=block)
+    # per-row nnz → accumulator width and POS width
+    seg = np.asarray(a.seg_id)[: a.nnz]
+    row_nnz = np.bincount(seg, minlength=n_rows) if a.nnz else np.zeros(n_rows)
+    max_row_nnz = int(row_nnz.max(initial=1)) or 1
+    acc_bits = max(1, math.ceil(math.log2(max(max_row_nnz, 1)))) \
+        if max_row_nnz > 1 else 0
+    kc = m + n + acc_bits + 1
+    pos_bits = max(1, math.ceil(math.log2(max_row_nnz))) \
+        if max_row_nnz > 1 else 1
+    ci_bits = max(1, math.ceil(math.log2(max(n_cols, 2))))
+
+    lay = make_layout(m, n, ci_bits, pos_bits, kc)
+    ap = AP(rows=a.nnz_pad, bits=lay.total_bits)
+    w_vals = np.asarray(a.values)[: a.nnz].astype(np.int64)
+    w_stream = np.zeros(ap.rows, np.int64)
+    w_stream[: a.nnz] = w_vals
+    load_cam(ap, lay, a, w_stream)
+
+    nnz_b = broadcast(ap, lay, b_int)
+    multiply(ap, lay)
+    rounds = soft_reduction(ap, lay)
+    if activation == "relu":
+        relu(ap, lay)
+
+    # read out: head PUs (FIRST or ONLY flag) hold the row results
+    out = np.zeros(n_rows, np.int64)
+    flags = np.asarray(a.row_flag)[: a.nnz]
+    segs = np.asarray(a.seg_id)[: a.nnz]
+    for r in range(a.nnz):
+        if flags[r] & acsr_mod.FLAG_FIRST:
+            out[segs[r]] = ap.read_field(r, lay.c, signed=True)
+    return FCResult(out=out, cycles=ap.counters["cycles"], rounds=rounds,
+                    nnz_b=nnz_b, counters=dict(ap.counters), layout=lay,
+                    max_row_nnz=max_row_nnz)
+
+
+def fc_reference(w_int: np.ndarray, b_int: np.ndarray,
+                 activation: Optional[str] = "relu") -> np.ndarray:
+    """Plain integer matvec oracle."""
+    out = np.asarray(w_int, np.int64) @ np.asarray(b_int, np.int64)
+    if activation == "relu":
+        out = np.maximum(out, 0)
+    return out

@@ -1,0 +1,165 @@
+"""Bit-level associative processor (AP) emulator — paper §2.1–2.2, Fig. 1.
+
+Faithful functional model of AIDA's hardware primitives:
+
+* a CAM array of ``rows × bits`` cells (one data element per row = one PU),
+* ``compare(cols, key)``  — match key against the unmasked columns of EVERY
+  row simultaneously; matching rows are sampled into the TAG register,
+* ``write(cols, bits)``   — parallel write into the unmasked columns of all
+  tagged rows (compare+write pairs execute in the same cycle, §2.2),
+* ``move(direction, step)`` — shift the TAG vector by ``short_step`` (1) or
+  ``long_step`` (16) positions (Fig. 1(c)),
+* ``if_match``            — global OR of the TAG vector.
+
+The emulator is a *host-side validation artifact* (numpy): it exists to prove
+the Fig. 3 algorithm correct bit-for-bit and to count cycles/energy exactly.
+The production TPU path (kernels/, models/) shares oracles with it.
+
+Cycle accounting follows the paper: a compare immediately followed by a
+dependent parallel write counts as ONE cycle (simultaneous execution, §2.2);
+standalone compares, writes and each tag move count one cycle each.
+Crucially the *controller is SIMD*: every op sequence is data-independent
+(worst-case), so cycle counts are closed-form functions of the operand widths
+— `aida_sim.py` reproduces them analytically and tests assert equality.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+SHORT_STEP = 1
+LONG_STEP = 16  # Fig. 1(c)
+
+
+@dataclasses.dataclass
+class Field:
+    """A named bit-column range [base, base+width); LSB first."""
+    base: int
+    width: int
+
+    def cols(self, lo: int = 0, hi: Optional[int] = None) -> np.ndarray:
+        hi = self.width if hi is None else hi
+        assert 0 <= lo <= hi <= self.width
+        return np.arange(self.base + lo, self.base + hi)
+
+    def col(self, i: int) -> int:
+        assert 0 <= i < self.width
+        return self.base + i
+
+
+class AP:
+    """The CAM array + TAG logic + op/energy counters."""
+
+    def __init__(self, rows: int, bits: int):
+        self.rows = rows
+        self.bits = bits
+        self.cam = np.zeros((rows, bits), dtype=np.uint8)
+        self.tag = np.zeros(rows, dtype=bool)
+        self.counters: Dict[str, int] = dict(
+            cycles=0, compare=0, write=0, move=0, if_match=0,
+            compare_bitcells=0, write_bitcells=0, tag_events=0)
+
+    # ------------------------------------------------------------------ ops
+    def compare(self, cols: Sequence[int], key: Sequence[int],
+                fuse_write: bool = False) -> np.ndarray:
+        """Match ``key`` against columns ``cols`` of every row → TAG.
+
+        ``fuse_write=True`` marks this compare as the first half of a fused
+        compare+write pair; the cycle is charged by the write.
+        """
+        cols = np.asarray(cols, dtype=np.int64)
+        key = np.asarray(key, dtype=np.uint8)
+        assert cols.shape == key.shape
+        if cols.size == 0:
+            self.tag = np.ones(self.rows, dtype=bool)
+        else:
+            self.tag = (self.cam[:, cols] == key[None, :]).all(axis=1)
+        self.counters["compare"] += 1
+        self.counters["compare_bitcells"] += self.rows * cols.size
+        self.counters["tag_events"] += self.rows
+        if not fuse_write:
+            self.counters["cycles"] += 1
+        return self.tag.copy()
+
+    def write(self, cols: Sequence[int], bits: Sequence[int],
+              fused: bool = False) -> None:
+        """Parallel write of ``bits`` into columns ``cols`` of tagged rows."""
+        cols = np.asarray(cols, dtype=np.int64)
+        bits = np.asarray(bits, dtype=np.uint8)
+        assert cols.shape == bits.shape
+        idx = np.nonzero(self.tag)[0]
+        if cols.size and idx.size:
+            self.cam[np.ix_(idx, cols)] = bits[None, :]
+        self.counters["write"] += 1
+        self.counters["write_bitcells"] += int(idx.size) * cols.size
+        self.counters["cycles"] += 1  # fused pair charged once, here
+        del fused
+
+    def compare_write(self, ccols, ckey, wcols, wbits) -> None:
+        """Fused compare+write (one cycle, §2.2)."""
+        self.compare(ccols, ckey, fuse_write=True)
+        self.write(wcols, wbits, fused=True)
+
+    def move(self, direction: str, step: int) -> None:
+        """Shift TAG by ``step`` rows; 'up' = toward row 0 (paper Fig. 3)."""
+        assert step in (SHORT_STEP, LONG_STEP)
+        t = np.zeros_like(self.tag)
+        if direction == "up":
+            t[:-step or None] = self.tag[step:]
+        elif direction == "down":
+            t[step:] = self.tag[:-step]
+        else:
+            raise ValueError(direction)
+        self.tag = t
+        self.counters["move"] += 1
+        self.counters["cycles"] += 1
+        self.counters["tag_events"] += self.rows
+
+    def move_by(self, direction: str, dist: int) -> int:
+        """Decompose an arbitrary distance into long/short steps (Fig. 1(c)).
+
+        Returns the number of move cycles spent.
+        """
+        n_long, rem = divmod(dist, LONG_STEP)
+        for _ in range(n_long):
+            self.move(direction, LONG_STEP)
+        for _ in range(rem):
+            self.move(direction, SHORT_STEP)
+        return n_long + rem
+
+    def if_match(self) -> bool:
+        self.counters["if_match"] += 1
+        self.counters["cycles"] += 1
+        return bool(self.tag.any())
+
+    def set_tag(self, tag: np.ndarray) -> None:
+        """Load TAG directly (test scaffolding only — not a hardware op)."""
+        self.tag = tag.astype(bool).copy()
+
+    # ------------------------------------------------------------ host I/O
+    def load_field(self, row: int, field: Field, value: int,
+                   width: Optional[int] = None) -> None:
+        """Host-side CAM image initialization (DMA load, not cycle-counted)."""
+        width = field.width if width is None else width
+        for i in range(width):
+            self.cam[row, field.base + i] = (value >> i) & 1
+
+    def read_field(self, row: int, field: Field,
+                   signed: bool = False) -> int:
+        v = 0
+        for i in range(field.width):
+            v |= int(self.cam[row, field.base + i]) << i
+        if signed and v >= (1 << (field.width - 1)):
+            v -= 1 << field.width
+        return v
+
+    def read_column(self, col: int) -> np.ndarray:
+        return self.cam[:, col].copy()
+
+
+def move_cycles(dist: int) -> int:
+    """Closed-form cycle cost of move_by (for the analytical simulator)."""
+    n_long, rem = divmod(dist, LONG_STEP)
+    return n_long + rem

@@ -1,0 +1,118 @@
+"""Codebook quantization — the TPU realization of *perfect induction* (§2.1).
+
+The paper: when operands take at most 2^m values, any function of them can be
+evaluated by matching every input combination and writing the precomputed
+output — O(2^m) cycles *independent of the dataset size*. Compressed DNNs
+(EIE / Deep Compression) cluster weights to 16 shared values, so AIDA applies
+perfect induction *bit-parallel*: traverse the 16×16 multiplier×multiplicand
+combinations and substitute products.
+
+On TPU the same idea becomes: weights live in HBM as packed 4-bit codebook
+indices; the kernel expands them against a 16-entry centroid table held in
+VMEM (weights-only mode), or looks products up in a 16×16 *product LUT*
+(weights+activations mode — literally the paper's induction table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Codebook:
+    centroids: jnp.ndarray  # [k] float32, sorted ascending
+    codes: jnp.ndarray      # packed uint8 (two 4-bit codes per byte) or raw uint8
+    shape: Tuple[int, ...]  # original tensor shape
+    packed: bool
+
+    @property
+    def k(self) -> int:
+        return int(self.centroids.shape[0])
+
+
+def kmeans_1d(x: jnp.ndarray, k: int = 16, iters: int = 25,
+              seed: int = 0) -> jnp.ndarray:
+    """Lloyd's k-means on a flat array; returns sorted centroids [k].
+
+    Initialization is linear between min/max (standard for weight sharing —
+    Deep Compression found linear init best for this use).
+    """
+    x = x.reshape(-1).astype(jnp.float32)
+    lo, hi = jnp.min(x), jnp.max(x)
+    cents = lo + (hi - lo) * (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+
+    def step(cents, _):
+        d = jnp.abs(x[:, None] - cents[None, :])        # [n, k]
+        assign = jnp.argmin(d, axis=1)
+        sums = jax.ops.segment_sum(x, assign, num_segments=k)
+        cnts = jax.ops.segment_sum(jnp.ones_like(x), assign, num_segments=k)
+        new = jnp.where(cnts > 0, sums / jnp.maximum(cnts, 1.0), cents)
+        return new, None
+
+    cents, _ = jax.lax.scan(step, cents, None, length=iters)
+    return jnp.sort(cents)
+
+
+def assign(x: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-centroid code for every element; uint8 [x.shape]."""
+    d = jnp.abs(x[..., None] - centroids)
+    return jnp.argmin(d, axis=-1).astype(jnp.uint8)
+
+
+def pack4(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack 4-bit codes two-per-byte along the last axis (even length)."""
+    assert codes.shape[-1] % 2 == 0, "last axis must be even to pack"
+    lo = codes[..., 0::2].astype(jnp.uint8)
+    hi = codes[..., 1::2].astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack4`; doubles the last axis."""
+    lo = packed & 0xF
+    hi = packed >> 4
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def quantize(w: jnp.ndarray, k: int = 16, iters: int = 25,
+             pack: bool = True) -> Codebook:
+    """Cluster a weight tensor to a k-entry codebook; optionally pack 4-bit."""
+    cents = kmeans_1d(w, k=k, iters=iters)
+    codes = assign(w, cents)
+    if pack:
+        assert k <= 16, "packing assumes 4-bit codes"
+        flat = codes.reshape(w.shape[0], -1) if w.ndim > 1 else codes[None, :]
+        codes = pack4(flat.reshape(codes.shape))
+    return Codebook(centroids=cents, codes=codes, shape=tuple(w.shape),
+                    packed=pack)
+
+
+def dequantize(cb: Codebook) -> jnp.ndarray:
+    codes = unpack4(cb.codes) if cb.packed else cb.codes
+    codes = codes.reshape(cb.shape)
+    return jnp.take(cb.centroids, codes.astype(jnp.int32), axis=0)
+
+
+def product_lut(w_centroids: jnp.ndarray,
+                a_centroids: jnp.ndarray) -> jnp.ndarray:
+    """The perfect-induction table: LUT[i, j] = w_centroids[i]*a_centroids[j].
+
+    16×16 f32 = 1 KiB — it lives in VMEM (in AIDA it lives in the microcode).
+    """
+    return jnp.outer(w_centroids, a_centroids)
+
+
+def lut_matvec_ref(w_codes: jnp.ndarray, lut: jnp.ndarray,
+                   a_codes: jnp.ndarray) -> jnp.ndarray:
+    """Matvec where *every* multiply is a table lookup (both operands coded).
+
+    w_codes: [n, k_in] uint8, a_codes: [k_in] uint8, lut: [kw, ka] f32.
+    This is AIDA's bit-parallel perfect-induction multiply, array form.
+    """
+    prods = lut[w_codes.astype(jnp.int32), a_codes.astype(jnp.int32)[None, :]]
+    return prods.sum(axis=1)

@@ -1,0 +1,58 @@
+"""Scalar quantization utilities — the wordlength axis of Fig. 5(b).
+
+AIDA's bit-serial arithmetic makes runtime quadratic in wordlength, so the
+paper sweeps precision (binary/ternary → 16-bit). On TPU wordlength becomes a
+storage/bandwidth axis: int8 (MXU-native), int4-codebook (see codebook.py) and
+ternary are supported per layer; bf16 is the dense baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class QTensor:
+    """Symmetric per-channel quantized tensor: w ≈ q * scale."""
+    q: jnp.ndarray        # int8 (or int4 range stored in int8) [..., n]
+    scale: jnp.ndarray    # f32, broadcastable to q
+    bits: int
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+
+def quantize_int(w: jnp.ndarray, bits: int = 8,
+                 axis: Optional[int] = 0) -> QTensor:
+    """Symmetric per-channel (along ``axis``) integer quantization."""
+    qmax = 2 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        amax = jnp.max(jnp.abs(w), axis=tuple(i for i in range(w.ndim)
+                                              if i != axis), keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return QTensor(q=q, scale=scale.astype(jnp.float32), bits=bits)
+
+
+def dequantize_int(t: QTensor) -> jnp.ndarray:
+    return t.q.astype(jnp.float32) * t.scale
+
+
+def quantize_ternary(w: jnp.ndarray) -> QTensor:
+    """Ternary {-1, 0, +1}·scale with 0.7·mean|w| threshold (TWN)."""
+    thresh = 0.7 * jnp.mean(jnp.abs(w))
+    mask = jnp.abs(w) > thresh
+    scale = jnp.sum(jnp.abs(w) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    q = jnp.sign(w) * mask
+    return QTensor(q=q.astype(jnp.int8), scale=scale[None], bits=2)
+
+
+def int8_matmul_ref(x: jnp.ndarray, t: QTensor) -> jnp.ndarray:
+    """x @ dequant(W)^T with the dequant folded after the int accumulate."""
+    acc = jnp.matmul(x.astype(jnp.float32), t.q.astype(jnp.float32).T)
+    return acc * t.scale.reshape(1, -1)

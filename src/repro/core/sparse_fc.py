@@ -1,0 +1,149 @@
+"""Production FC layer — the paper's technique as a first-class feature.
+
+Every projection in the model zoo can run in one of five modes (per-layer,
+config-selectable; ``aida`` = the paper's full configuration):
+
+  dense      bf16/f32 matmul                                  (baseline)
+  int8       symmetric per-channel int8                       (Fig. 5b axis)
+  codebook4  16-entry shared-value weights, fused dequant     (perfect
+             induction, weights-only)                          [Pallas]
+  acsr       unstructured sparsity, blocked ACSR               [Pallas]
+  aida       sparsity + 4-bit codebook (EIE/AIDA operating point) [Pallas]
+
+`compress()` is the offline pipeline (magnitude prune → k-means share →
+pack) that turns a trained dense checkpoint into AIDA serving format.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acsr as acsr_mod
+from repro.core import codebook as cb
+from repro.core import quant as q
+from repro.kernels import acsr_spmv as sp
+from repro.kernels import ops
+
+MODES = ("dense", "int8", "codebook4", "acsr", "aida")
+
+
+@dataclasses.dataclass
+class CompressedFC:
+    """One FC layer in a serving-compressed representation: y = x @ W.T.
+
+    Registered as a pytree, so a CompressedFC can REPLACE a weight matrix
+    inside model params and flow through jitted decode steps — the AIDA
+    serving mode plugs into every architecture's projections transparently
+    (see models.layers.dense)."""
+    mode: str
+    shape: tuple                      # (n_out, n_in)
+    dense: Optional[jnp.ndarray] = None          # dense/fallback weights
+    qt: Optional[q.QTensor] = None               # int8
+    codes_packed: Optional[jnp.ndarray] = None   # codebook4 [N, K/2] uint8
+    centroids: Optional[jnp.ndarray] = None
+    blocked: Optional[sp.BlockedACSR] = None     # acsr / aida
+
+
+def _cfc_flatten(c: CompressedFC):
+    return ((c.dense, c.qt, c.codes_packed, c.centroids, c.blocked),
+            (c.mode, c.shape))
+
+
+def _cfc_unflatten(aux, children):
+    dense, qt, codes_packed, centroids, blocked = children
+    return CompressedFC(mode=aux[0], shape=aux[1], dense=dense, qt=qt,
+                        codes_packed=codes_packed, centroids=centroids,
+                        blocked=blocked)
+
+
+jax.tree_util.register_pytree_node(CompressedFC, _cfc_flatten, _cfc_unflatten)
+
+
+def _qt_flatten(t: q.QTensor):
+    return ((t.q, t.scale), (t.bits,))
+
+
+jax.tree_util.register_pytree_node(
+    q.QTensor, _qt_flatten,
+    lambda aux, ch: q.QTensor(q=ch[0], scale=ch[1], bits=aux[0]))
+
+
+def compress(w: np.ndarray, mode: str = "aida", density: float = 0.10,
+             k: int = 16, block_rows: int = 128,
+             kmeans_iters: int = 25) -> CompressedFC:
+    """Offline Deep-Compression-style pipeline (prune → share → pack)."""
+    w = np.asarray(w, np.float32)
+    n_out, n_in = w.shape
+    if mode == "dense":
+        return CompressedFC("dense", (n_out, n_in), dense=jnp.asarray(w))
+    if mode == "int8":
+        return CompressedFC("int8", (n_out, n_in),
+                            qt=q.quantize_int(jnp.asarray(w), bits=8, axis=0))
+    if mode == "codebook4":
+        cbq = cb.quantize(jnp.asarray(w), k=k, iters=kmeans_iters, pack=True)
+        return CompressedFC("codebook4", (n_out, n_in),
+                            codes_packed=cbq.codes.reshape(n_out, n_in // 2),
+                            centroids=cbq.centroids)
+    if mode == "acsr":
+        pruned = acsr_mod.prune_topk(w, density)
+        return CompressedFC("acsr", (n_out, n_in),
+                            blocked=sp.block_encode(pruned, block_rows))
+    if mode == "aida":
+        pruned = acsr_mod.prune_topk(w, density)
+        nz = pruned[pruned != 0]
+        cents = np.asarray(cb.kmeans_1d(jnp.asarray(nz), k=k - 1,
+                                        iters=kmeans_iters))
+        cents = np.concatenate([[0.0], cents]).astype(np.float32)
+        return CompressedFC("aida", (n_out, n_in),
+                            blocked=sp.block_encode_coded(pruned, cents,
+                                                          block_rows))
+    raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
+
+
+def apply_fc(layer: CompressedFC, x: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ W.T for x [B, n_in] (or [n_in]) under any mode."""
+    squeeze = x.ndim == 1
+    x2 = x[None, :] if squeeze else x
+    if layer.mode == "dense":
+        y = jnp.matmul(x2, layer.dense.T,
+                       preferred_element_type=jnp.float32)
+    elif layer.mode == "int8":
+        y = q.int8_matmul_ref(x2, layer.qt)
+    elif layer.mode == "codebook4":
+        y = ops.lut_matmul(x2, layer.codes_packed, layer.centroids)
+    elif layer.mode in ("acsr", "aida"):
+        y = ops.acsr_spmv(layer.blocked, x2.T).T
+    else:
+        raise ValueError(layer.mode)
+    return y[0] if squeeze else y
+
+
+def dense_equivalent(layer: CompressedFC) -> np.ndarray:
+    """Materialize the effective dense weights (for error analysis)."""
+    if layer.mode == "dense":
+        return np.asarray(layer.dense)
+    if layer.mode == "int8":
+        return np.asarray(q.dequantize_int(layer.qt))
+    if layer.mode == "codebook4":
+        codes = np.asarray(cb.unpack4(layer.codes_packed))
+        return np.asarray(layer.centroids)[codes.astype(np.int64)]
+    if layer.mode in ("acsr", "aida"):
+        b = layer.blocked
+        vals = np.asarray(b.values, np.float32)
+        if b.centroids is not None:
+            vals = np.asarray(b.centroids)[np.asarray(b.values, np.int64)]
+        out = np.zeros(layer.shape, np.float32)
+        br = b.block_rows
+        for blk in range(b.nblocks):
+            segs = np.asarray(b.seg_local[blk])
+            cols = np.asarray(b.col_idx[blk])
+            keep = segs < br
+            rows = blk * br + segs[keep]
+            inb = rows < layer.shape[0]
+            out[rows[inb], cols[keep][inb]] = vals[blk][keep][inb]
+        return out
+    raise ValueError(layer.mode)

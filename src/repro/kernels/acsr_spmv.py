@@ -1,0 +1,190 @@
+"""Blocked-ACSR sparse matvec/matmul — the paper's algorithm, TPU-native.
+
+The per-nnz stream (value, col_idx, seg_id) is regrouped into row blocks:
+``block_rows`` consecutive matrix rows contribute one padded entry stream of
+length ``me`` (max entries per row-block, padded with seg_local=block_rows).
+Each grid step then IS the paper's Fig. 3 pipeline for its block:
+
+  activation broadcast → gather x[col_idx]   (VMEM gather; x stays resident)
+  multiplication       → values * gathered   (VPU, all lanes in parallel)
+  soft reduction       → one-hot(seg_local)ᵀ @ products on the MXU —
+                         a segmented sum computed as a [me, bn+1] matmul;
+                         the MXU's systolic reduction replaces the CAM's
+                         tag-shift binary tree (log-depth in both cases).
+
+Supports matvec (x: [K]) and multi-activation matmul (x: [K, B]), plus
+codebook-coded values (values are uint8 codes dequantized against a
+16-entry table in VMEM — combine with sparsity for the full AIDA mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import acsr as acsr_mod
+
+
+# --------------------------------------------------------------- format
+@dataclasses.dataclass
+class BlockedACSR:
+    """Row-blocked ACSR with static shapes (TPU layout of the paper's Fig. 2).
+
+    values:    [nblocks, me] f32 (or uint8 codes if ``coded``)
+    col_idx:   [nblocks, me] int32
+    seg_local: [nblocks, me] int32 in [0, block_rows]; block_rows = padding
+
+    Registered as a pytree (arrays = leaves, geometry = static) so
+    compressed weights can live INSIDE jitted model params.
+    """
+    values: jnp.ndarray
+    col_idx: jnp.ndarray
+    seg_local: jnp.ndarray
+    shape: Tuple[int, int]
+    block_rows: int
+    nnz: int
+    centroids: Optional[jnp.ndarray] = None  # set when values are codes
+
+    @property
+    def nblocks(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def me(self) -> int:
+        return int(self.values.shape[1])
+
+
+def _bacsr_flatten(b: "BlockedACSR"):
+    return ((b.values, b.col_idx, b.seg_local, b.centroids),
+            (b.shape, b.block_rows, b.nnz))
+
+
+def _bacsr_unflatten(aux, children):
+    values, col_idx, seg_local, centroids = children
+    shape, block_rows, nnz = aux
+    return BlockedACSR(values=values, col_idx=col_idx, seg_local=seg_local,
+                       shape=shape, block_rows=block_rows, nnz=nnz,
+                       centroids=centroids)
+
+
+jax.tree_util.register_pytree_node(BlockedACSR, _bacsr_flatten,
+                                   _bacsr_unflatten)
+
+
+def block_encode(dense: np.ndarray, block_rows: int = 128,
+                 lane_pad: int = 128) -> BlockedACSR:
+    """Re-block a dense matrix's nonzeros by groups of ``block_rows`` rows."""
+    dense = np.asarray(dense)
+    n_rows, n_cols = dense.shape
+    nblocks = (n_rows + block_rows - 1) // block_rows
+    per_block = []
+    me = lane_pad
+    for bidx in range(nblocks):
+        rows = slice(bidx * block_rows, min((bidx + 1) * block_rows, n_rows))
+        sub = dense[rows]
+        r, c = np.nonzero(sub)
+        order = np.lexsort((c, r))
+        per_block.append((sub[r, c][order], c[order], r[order]))
+        me = max(me, len(order))
+    me = ((me + lane_pad - 1) // lane_pad) * lane_pad
+    # compact index types — the memory footprint IS the paper's argument
+    col_t = np.int16 if n_cols < 2 ** 15 else np.int32
+    seg_t = np.uint8 if block_rows < 2 ** 8 else np.int32
+    vals = np.zeros((nblocks, me), np.float32)
+    cols = np.zeros((nblocks, me), col_t)
+    segs = np.full((nblocks, me), block_rows, seg_t)
+    nnz = 0
+    for bidx, (v, c, r) in enumerate(per_block):
+        k = len(v)
+        nnz += k
+        vals[bidx, :k] = v
+        cols[bidx, :k] = c
+        segs[bidx, :k] = r
+    return BlockedACSR(values=jnp.asarray(vals), col_idx=jnp.asarray(cols),
+                       seg_local=jnp.asarray(segs), shape=(n_rows, n_cols),
+                       block_rows=block_rows, nnz=int(nnz))
+
+
+def block_encode_coded(dense: np.ndarray, centroids: np.ndarray,
+                       block_rows: int = 128,
+                       lane_pad: int = 128) -> BlockedACSR:
+    """Sparse + codebook: store the nonzeros' 4-bit codes, not values."""
+    b = block_encode(dense, block_rows, lane_pad)
+    cents = np.asarray(centroids, np.float32)
+    vals = np.asarray(b.values)
+    codes = np.abs(vals[..., None] - cents[None, None, :]).argmin(-1)
+    codes[vals == 0.0] = int(np.abs(cents).argmin())  # padding → zero-ish code
+    return dataclasses.replace(
+        b, values=jnp.asarray(codes.astype(np.uint8)),
+        centroids=jnp.asarray(cents))
+
+
+# --------------------------------------------------------------- kernel
+def _spmv_kernel(vals_ref, cols_ref, segs_ref, x_ref, o_ref, *,
+                 block_rows: int, coded: bool, cents_ref=None):
+    vals = vals_ref[...]                                  # [1, me]
+    if coded:
+        vals = jnp.take(cents_ref[0], vals.astype(jnp.int32), axis=0)
+    cols = cols_ref[...][0].astype(jnp.int32)             # [me]
+    segs = segs_ref[...][0].astype(jnp.int32)             # [me]
+    x = x_ref[...]                                        # [K, B]
+    gathered = jnp.take(x, cols, axis=0)                  # broadcast: [me, B]
+    prod = vals.reshape(-1, 1).astype(jnp.float32) * gathered.astype(jnp.float32)
+    # soft reduction on the MXU: segmented sum as one-hot matmul
+    onehot = (segs[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, block_rows), 1)
+              ).astype(jnp.float32)                       # [me, bn]
+    o_ref[...] = jax.lax.dot_general(
+        onehot, prod, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[None]         # [1, bn, B]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _spmv_call(values, col_idx, seg_local, x2d, centroids, *,
+               block_rows: int, interpret: bool):
+    nblocks, me = values.shape
+    k, bsz = x2d.shape
+    coded = centroids is not None
+    kern = functools.partial(_spmv_kernel, block_rows=block_rows,
+                             coded=coded)
+    in_specs = [
+        pl.BlockSpec((1, me), lambda i: (i, 0)),
+        pl.BlockSpec((1, me), lambda i: (i, 0)),
+        pl.BlockSpec((1, me), lambda i: (i, 0)),
+        pl.BlockSpec((k, bsz), lambda i: (0, 0)),   # x resident in VMEM
+    ]
+    args = [values, col_idx, seg_local, x2d]
+    if coded:
+        cents2d = centroids.reshape(1, -1)
+        def kern(vals_ref, cols_ref, segs_ref, x_ref, cents_ref, o_ref):
+            _spmv_kernel(vals_ref, cols_ref, segs_ref, x_ref, o_ref,
+                         block_rows=block_rows, coded=True,
+                         cents_ref=cents_ref)
+        in_specs.append(pl.BlockSpec((1, cents2d.shape[1]), lambda i: (0, 0)))
+        args.append(cents2d)
+    return pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, block_rows, bsz), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, block_rows, bsz),
+                                       jnp.float32),
+        interpret=interpret,
+    )(*args)
+
+
+def acsr_spmv(b: BlockedACSR, x: jnp.ndarray,
+              interpret: bool = True) -> jnp.ndarray:
+    """Sparse (optionally coded) matmul: returns W @ x, [n_rows] / [n_rows,B]."""
+    squeeze = x.ndim == 1
+    x2d = x[:, None] if squeeze else x
+    out = _spmv_call(b.values, b.col_idx, b.seg_local, x2d, b.centroids,
+                     block_rows=b.block_rows, interpret=interpret)
+    out = out.reshape(b.nblocks * b.block_rows, -1)[: b.shape[0]]
+    return out[:, 0] if squeeze else out

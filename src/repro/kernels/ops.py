@@ -1,0 +1,122 @@
+"""Public jit'd kernel API — dispatch between Pallas kernels and jnp refs.
+
+On this (CPU) container Pallas runs in interpret mode; on TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or rely on the backend auto-detection) to lower
+the kernels natively.  Training paths that need autodiff either use a
+custom_vjp pairing the fwd/bwd kernels (attention) or a differentiable
+lax.scan formulation (recurrences).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import linear_scan as _ls
+from repro.kernels import lut_matmul as _lm
+from repro.kernels import acsr_spmv as _sp
+
+
+def pallas_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------- attention
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, causal, window, softcap, scale, bq, bk, interp):
+    o, _ = _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale, bq=bq,
+                                   bk=bk, interpret=interp)
+    return o.astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, causal, window, softcap, scale, bq, bk, interp):
+    o, lse = _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                     softcap=softcap, scale=scale, bq=bq,
+                                     bk=bk, interpret=interp)
+    return o.astype(q.dtype), (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, softcap, scale, bq, bk, interp, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _fa.flash_attention_bwd(
+        q, k, v, o, lse, do.astype(jnp.float32), causal=causal,
+        window=window, softcap=softcap, scale=scale, bq=bq, bk=bk,
+        interpret=interp)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, scale: Optional[float] = None,
+              impl: str = "flash", bq: int = 128, bk: int = 128):
+    """Self-attention [B,H,T,D]×[B,Hkv,T,D] -> [B,H,T,D] (training/prefill).
+
+    impl="flash": Pallas fwd/bwd kernels via custom_vjp.
+    impl="ref":   pure-jnp oracle (XLA-fused; also the dry-run default, so
+                  compiled HLO stays kernel-free and cost-analyzable).
+    """
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale).astype(q.dtype)
+    t = q.shape[2]
+    bq_, bk_ = min(bq, t), min(bk, t)
+    return _flash(q, k, v, causal, window, softcap, scale, bq_, bk_,
+                  pallas_interpret())
+
+
+# ------------------------------------------------------------- recurrences
+def rwkv6(r, k, v, w, u, *, impl: str = "scan", chunk: int = 64):
+    """RWKV6 WKV. impl="scan" (differentiable, training/dry-run) or
+    impl="kernel" (Pallas, serving)."""
+    if impl == "kernel":
+        return _ls.rwkv6_fwd(r, k, v, w, u, chunk=chunk,
+                             interpret=pallas_interpret())
+    return _ref.rwkv6_ref(r, k, v, w, u)
+
+
+def rwkv6_decode_step(S, r, k, v, w, u):
+    """Single-token WKV update. S [B,H,Dk,Dv]; r,k,w [B,H,Dk]; v [B,H,Dv]."""
+    kv = k[..., :, None] * v[..., None, :]
+    o = jnp.einsum("bhkv,bhk->bhv", S + u[None, :, :, None] * kv, r)
+    S = w[..., :, None] * S + kv
+    return S, o
+
+
+def mamba(x, dt, A, B, C):
+    """Selective SSM (differentiable lax.scan path)."""
+    return _ref.mamba_ref(x, dt, A, B, C)
+
+
+def mamba_decode_step(h, x, dt, A, B, C):
+    """h [B,D,N]; x,dt [B,D]; B,C [B,N] -> (h', y [B,D])."""
+    decay = jnp.exp(dt[..., None] * A[None])              # [B,D,N]
+    h = decay * h + (dt * x)[..., None] * B[:, None, :]
+    return h, jnp.einsum("bdn,bn->bd", h, C)
+
+
+# --------------------------------------------------------------- quantized
+def lut_matmul(x, codes_packed, centroids, **kw):
+    kw.setdefault("interpret", pallas_interpret())
+    return _lm.lut_matmul(x, codes_packed, centroids, **kw)
+
+
+def lut_product_matmul(x_codes, codes_packed, lut, **kw):
+    kw.setdefault("interpret", pallas_interpret())
+    return _lm.lut_product_matmul(x_codes, codes_packed, lut, **kw)
+
+
+def acsr_spmv(blocked, x, **kw):
+    kw.setdefault("interpret", pallas_interpret())
+    return _sp.acsr_spmv(blocked, x, **kw)

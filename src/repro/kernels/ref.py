@@ -1,0 +1,153 @@
+"""Pure-jnp oracles for every Pallas kernel (the ref side of kernel tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------- lut_matmul
+def unpack4(packed: jnp.ndarray) -> jnp.ndarray:
+    lo = packed & 0xF
+    hi = packed >> 4
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def lut_matmul_ref(x: jnp.ndarray, codes_packed: jnp.ndarray,
+                   centroids: jnp.ndarray) -> jnp.ndarray:
+    """x [B, K] @ dequant(codes [N, K/2] packed, centroids [16]).T -> [B, N].
+
+    The oracle materializes the full dense weight matrix; the kernel never
+    does (codes expand tile-by-tile inside VMEM — AIDA's in-memory dividend).
+    """
+    codes = unpack4(codes_packed).astype(jnp.int32)       # [N, K]
+    w = jnp.take(centroids, codes, axis=0)                # [N, K]
+    return jnp.matmul(x, w.T.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def lut_product_matmul_ref(x_codes: jnp.ndarray, codes_packed: jnp.ndarray,
+                           lut: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Fully-coded mode: BOTH operands are 4-bit codes, every multiply is a
+    16×16 product-LUT lookup (bit-parallel perfect induction, paper §3).
+
+    x_codes [B, K] uint8, codes_packed [N, K/2], lut [16,16] f32 -> [B, N].
+    """
+    del n_rows
+    w_codes = unpack4(codes_packed).astype(jnp.int32)     # [N, K]
+    prods = lut[w_codes[None, :, :], x_codes[:, None, :].astype(jnp.int32)]
+    return prods.sum(axis=-1)                             # [B, N]
+
+
+# ----------------------------------------------------------- acsr_spmv
+def acsr_spmv_ref(values: jnp.ndarray, col_idx: jnp.ndarray,
+                  seg_id: jnp.ndarray, x: jnp.ndarray,
+                  n_rows: int) -> jnp.ndarray:
+    """Per-nnz stream oracle. x: [K] or [K, B] -> [n_rows] or [n_rows, B]."""
+    gathered = jnp.take(x, col_idx, axis=0)               # activation bcast
+    prod = (values[:, None] if x.ndim == 2 else values) * gathered
+    return jax.ops.segment_sum(prod, seg_id, num_segments=n_rows + 1)[:n_rows]
+
+
+def blocked_acsr_spmv_ref(values: jnp.ndarray, col_idx: jnp.ndarray,
+                          seg_local: jnp.ndarray, x: jnp.ndarray,
+                          block_rows: int) -> jnp.ndarray:
+    """Row-blocked variant oracle.
+
+    values/col_idx/seg_local: [nblocks, me]; x [K] or [K,B].
+    Returns [nblocks*block_rows] or [nblocks*block_rows, B].
+    """
+    nblocks, me = values.shape
+    out_rows = nblocks * block_rows
+
+    def one(vals, cols, segs):
+        g = jnp.take(x, cols, axis=0)
+        prod = (vals[:, None] if x.ndim == 2 else vals) * g
+        return jax.ops.segment_sum(prod, segs,
+                                   num_segments=block_rows + 1)[:block_rows]
+
+    out = jax.vmap(one)(values, col_idx, seg_local)
+    return out.reshape(out_rows, -1) if x.ndim == 2 else out.reshape(out_rows)
+
+
+# ------------------------------------------------------ flash attention
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """q [B,H,Tq,D], k/v [B,Hkv,Tk,D] (GQA broadcast) -> [B,H,Tq,D]."""
+    b, h, tq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    tk = k.shape[2]
+    qi = jnp.arange(tq)[:, None] + (tk - tq)   # align ends (decode-friendly)
+    ki = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+# ------------------------------------------------------ linear scan (ssm)
+def rwkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              w: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """RWKV6 (Finch) WKV recurrence, sequential oracle.
+
+    r,k,w: [B,H,T,Dk], v: [B,H,T,Dv], u: [H,Dk] (bonus).
+    S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ ;  o_t = (S_{t-1} + diag(u)·k_t v_tᵀ)ᵀ r_t
+    Returns o: [B,H,T,Dv].  (w already exp(-exp(...)) ∈ (0,1).)
+    """
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+
+    def head(rh, kh, vh, wh, uh):
+        def step(S, inp):
+            rt, kt, vt, wt = inp
+            kv = jnp.outer(kt, vt)
+            out = ((S + uh[:, None] * kv).T @ rt)
+            S = wt[:, None] * S + kv
+            return S, out
+        S0 = jnp.zeros((dk, dv), jnp.float32)
+        _, out = jax.lax.scan(step, S0, (rh, kh, vh, wh))
+        return out
+
+    return jax.vmap(jax.vmap(head, in_axes=(0, 0, 0, 0, 0)),
+                    in_axes=(0, 0, 0, 0, None))(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w.astype(jnp.float32), u.astype(jnp.float32))
+
+
+def mamba_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+              Bm: jnp.ndarray, Cm: jnp.ndarray) -> jnp.ndarray:
+    """Selective-SSM (Mamba) oracle.
+
+    x,dt: [B,T,D], A: [D,N] (negative), Bm,Cm: [B,T,N] -> y [B,T,D].
+    h_t[d,n] = exp(dt_t[d] A[d,n]) h_{t-1}[d,n] + dt_t[d] x_t[d] B_t[n]
+    y_t[d]   = Σ_n h_t[d,n] C_t[n]
+    """
+    def seq(xb, dtb, Bb, Cb):
+        def step(h, inp):
+            xt, dtt, Bt, Ct = inp
+            decay = jnp.exp(dtt[:, None] * A)          # [D,N]
+            h = decay * h + (dtt * xt)[:, None] * Bt[None, :]
+            return h, h @ Ct
+        h0 = jnp.zeros((A.shape[0], A.shape[1]), jnp.float32)
+        _, y = jax.lax.scan(step, h0, (xb, dtb, Bb, Cb))
+        return y
+
+    return jax.vmap(seq)(x.astype(jnp.float32), dt.astype(jnp.float32),
+                         Bm.astype(jnp.float32), Cm.astype(jnp.float32))

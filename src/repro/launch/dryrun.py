@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each admissible cell this AOT-compiles the real `train_step` /
+`serve_step` (the same functions the trainer/engine jit) against
+ShapeDtypeStruct inputs on the production meshes — proving the sharding
+config is coherent (no mismatched collectives, divisibility holes, or
+compile-time OOMs) without touching hardware — and records
+memory_analysis / cost_analysis / per-collective bytes for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single,multi [--attn-impl einsum] [--json out]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, cell_supported, get, names
+from repro.configs.shapes import input_specs
+from repro.launch import mesh as mesh_lib
+from repro.models import model as M
+from repro.optim import adamw
+from repro.roofline import analysis as RA
+from repro.train import trainer
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg, shape, dp, dpax):
+    """PartitionSpecs for the input batch of this cell."""
+    dp_ok = shape.batch % max(dp, 1) == 0 and dp > 1
+    bspec = dpax if dp_ok else None
+    specs = {}
+    for k, v in input_specs(cfg, shape).items():
+        specs[k] = P(bspec, *([None] * (len(v.shape) - 1)))
+    return specs, dp_ok
+
+
+def _cast_tree_bf16(shapes):
+    import jax.numpy as jnp
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        shapes)
+
+
+def _lower(cfg, shape, mesh, attn_impl, remat, microbatches, dpax, dp,
+           unroll, streamed_loss=False, cast_params=False,
+           serve_bf16=False):
+    bspecs, dp_ok = batch_specs(cfg, shape, dp, dpax)
+    dp_spec = dpax if dp_ok else None
+    mdict = mesh_lib.mesh_shape_dict(mesh)
+    if shape.kind == "train":
+        tc = trainer.TrainConfig(remat=remat, attn_impl=attn_impl,
+                                 microbatches=microbatches,
+                                 streamed_loss=streamed_loss,
+                                 cast_params_bf16=cast_params)
+        step = trainer.make_train_step(cfg, tc, dp_spec=dp_spec,
+                                       unroll=unroll)
+        state_shapes = jax.eval_shape(
+            partial(trainer.init_state, cfg), jax.random.PRNGKey(0))
+        sspecs = trainer.state_specs(cfg, mdict)
+        in_sh = (_named(mesh, sspecs), _named(mesh, bspecs))
+        # production semantics: the step donates its state buffers
+        return jax.jit(step, in_shardings=in_sh,
+                       donate_argnums=(0,)).lower(
+            state_shapes, input_specs(cfg, shape))
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, _ = M.forward(cfg, params, batch, remat="none",
+                                  attn_impl=attn_impl, dp_spec=dp_spec,
+                                  unroll=unroll)
+            return logits
+        pspecs = M.param_specs(cfg, mdict)
+        pshapes = jax.eval_shape(partial(M.init_params, cfg),
+                                 jax.random.PRNGKey(0))
+        in_sh = (_named(mesh, pspecs), _named(mesh, bspecs))
+        return jax.jit(prefill_step, in_shardings=in_sh).lower(
+            pshapes, input_specs(cfg, shape))
+    # decode
+    def serve_step(params, state, tokens):
+        return M.decode_step(cfg, params, state, tokens, unroll=unroll)
+    pspecs = M.param_specs(cfg, mdict)
+    pshapes = jax.eval_shape(partial(M.init_params, cfg),
+                             jax.random.PRNGKey(0))
+    if serve_bf16:  # serving checkpoints are bf16 (§Perf)
+        pshapes = _cast_tree_bf16(pshapes)
+    st_shapes = jax.eval_shape(
+        partial(M.init_decode_state, cfg, shape.batch, shape.seq))
+    st_specs = M.state_specs(cfg, shape.batch, dp_ok, dpax)
+    tok_spec = P(dpax if dp_ok else None)
+    in_sh = (_named(mesh, pspecs), _named(mesh, st_specs),
+             NamedSharding(mesh, tok_spec))
+    # production semantics: the decode state is donated every step
+    return jax.jit(serve_step, in_shardings=in_sh,
+                   donate_argnums=(1,)).lower(
+        pshapes, st_shapes, input_specs(cfg, shape)["tokens"])
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               attn_impl: str = "einsum", remat: str = "dots",
+               microbatches: int = 1, verbose: bool = True,
+               cost_unroll: bool = False, streamed_loss: bool = False,
+               cast_params: bool = False, serve_bf16: bool = False):
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip", "reason": why}
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    chips = mesh.devices.size
+    dp = mesh_lib.dp_size(mesh)
+    dpax = mesh_lib.dp_axes(mesh)
+
+    t0 = time.perf_counter()
+    with mesh:
+        # the deliverable: the production (scanned) program must compile
+        compiled = _lower(cfg, shape, mesh, attn_impl, remat, microbatches,
+                          dpax, dp, unroll=False,
+                          streamed_loss=streamed_loss,
+                          cast_params=cast_params,
+                          serve_bf16=serve_bf16).compile()
+    t1 = time.perf_counter()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    unroll_s = None
+    if cost_unroll:
+        # roofline extraction: unrolled lowering so loop bodies are counted
+        with mesh:
+            compiled_u = _lower(cfg, shape, mesh, attn_impl, remat,
+                                microbatches, dpax, dp, unroll=True,
+                                streamed_loss=streamed_loss,
+                                cast_params=cast_params,
+                                serve_bf16=serve_bf16).compile()
+        unroll_s = round(time.perf_counter() - t1, 1)
+        cost = compiled_u.cost_analysis()
+        hlo = compiled_u.as_text()
+    roof = RA.from_compiled(arch, shape_name, mesh_name, chips, cost, hlo,
+                            RA.model_flops(cfg, shape), mem)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips,
+        "compile_s": round(t1 - t0, 1), "unroll_compile_s": unroll_s,
+        "hlo_flops": roof.hlo_flops,
+        "hlo_bytes": roof.hlo_bytes,
+        "coll_bytes": roof.coll_bytes,
+        "model_flops": roof.model_flops,
+        "t_compute": roof.t_compute, "t_memory": roof.t_memory,
+        "t_collective": roof.t_collective,
+        "bottleneck": roof.bottleneck,
+        "useful_flops_frac": roof.useful_flops_frac,
+        "roofline_frac": roof.roofline_frac,
+        "arg_bytes": mem.argument_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "out_bytes": mem.output_size_in_bytes,
+        "bytes_per_device": roof.bytes_per_device,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK "
+              f"({rec['compile_s']}s compile, "
+              f"args {mem.argument_size_in_bytes/2**30:.2f} GiB/dev, "
+              f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB/dev)")
+        print("         " + roof.row())
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--attn-impl", default="einsum")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--cost-unroll", action="store_true",
+                    help="also lower unrolled for roofline cost extraction")
+    ap.add_argument("--streamed-loss", action="store_true")
+    ap.add_argument("--json", default=None, help="append records to file")
+    args = ap.parse_args(argv)
+    archs = names() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+
+    records, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                try:
+                    rec = lower_cell(arch, shape, mesh_name == "multi",
+                                     attn_impl=args.attn_impl,
+                                     remat=args.remat,
+                                     microbatches=args.microbatches,
+                                     cost_unroll=args.cost_unroll,
+                                     streamed_loss=args.streamed_loss)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "fail", "error": repr(e)[:500]}
+                    failures.append(rec)
+                records.append(rec)
+                if args.json:
+                    with open(args.json, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skip" for r in records)
+    print(f"\n[dryrun] {n_ok} ok, {n_skip} skipped (documented), "
+          f"{len(failures)} FAILED of {len(records)}")
+    for f_ in failures:
+        print("  FAIL:", f_["arch"], f_["shape"], f_["mesh"], f_["error"])
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

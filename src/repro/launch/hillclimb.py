@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ must precede jax import (same rule as dryrun).
+
+"""§Perf hillclimb driver: lower one cell under a sequence of optimization
+variants and report the three roofline terms for each (hypothesis →
+change → before/after lives in EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch llama3-8b \
+      --shape train_4k [--mesh single] [--json out.jsonl]
+"""
+import argparse
+import json
+import sys
+
+from repro.launch.dryrun import lower_cell
+
+VARIANTS = {
+    "train": [
+        ("baseline (einsum attn, dense loss, remat=dots)", {}),
+        ("+chunked attention", {"attn_impl": "chunked"}),
+        ("+streamed vocab loss", {"attn_impl": "chunked",
+                                  "streamed_loss": True}),
+        ("+bf16 cast-before-gather",
+         {"attn_impl": "chunked", "streamed_loss": True,
+          "cast_params": True}),
+        ("+microbatch=4", {"attn_impl": "chunked", "streamed_loss": True,
+                           "cast_params": True, "microbatches": 4}),
+        ("full remat variant",
+         {"attn_impl": "chunked", "streamed_loss": True,
+          "cast_params": True, "remat": "full"}),
+    ],
+    "prefill": [
+        ("baseline (einsum attn)", {}),
+        ("+chunked attention", {"attn_impl": "chunked"}),
+    ],
+    "decode": [
+        ("baseline (f32 params)", {}),
+        ("+bf16 serving params", {"serve_bf16": True}),
+    ],
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--variants", default=None,
+                    help="comma list of variant indices to run")
+    args = ap.parse_args(argv)
+    kind = ("train" if args.shape.startswith("train") else
+            "prefill" if args.shape.startswith("prefill") else "decode")
+    variants = VARIANTS[kind]
+    if args.variants:
+        idx = [int(i) for i in args.variants.split(",")]
+        variants = [variants[i] for i in idx]
+    for name, kw in variants:
+        try:
+            rec = lower_cell(args.arch, args.shape, args.mesh == "multi",
+                             cost_unroll=True, verbose=False, **kw)
+        except Exception as e:  # noqa: BLE001
+            print(f"[hillclimb] {name}: FAILED {e!r}")
+            continue
+        rec["variant"] = name
+        print(f"[hillclimb] {name}:")
+        print(f"    compute={rec['t_compute']*1e3:9.3f}ms "
+              f"memory={rec['t_memory']*1e3:9.3f}ms "
+              f"coll={rec['t_collective']*1e3:9.3f}ms "
+              f"[{rec['bottleneck']}] temp={rec['temp_bytes']/2**30:6.2f}GiB "
+              f"useful={rec['useful_flops_frac']:.1%} "
+              f"roofline={rec['roofline_frac']:.2%}")
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

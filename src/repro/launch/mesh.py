@@ -1,0 +1,36 @@
+"""Production meshes.  Defined as FUNCTIONS so importing never touches jax
+device state (jax locks the device count on first backend init)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16 data × 16 model).  Multi-pod: 2 × 256."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_pp_mesh():
+    """Optional pipeline-parallel mesh (4 stages × 8 data × 8 model)."""
+    return jax.make_mesh((4, 8, 8), ("pipe", "data", "model"))
+
+
+def mesh_shape_dict(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The batch-sharding axes for this mesh (pod folds into data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh) -> int:
+    d = mesh_shape_dict(mesh)
+    out = 1
+    for a in dp_axes(mesh):
+        out *= d[a]
+    return out

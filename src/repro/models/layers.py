@@ -1,0 +1,136 @@
+"""Foundational layers: norms, rotary embeddings, MLPs, initializers.
+
+Pure-functional: params are nested dicts of jnp arrays; every `*_init`
+returns params and the matching `*_apply` consumes them.  Compute follows a
+mixed-precision policy: params f32, matmul compute bf16, norms/softmax f32.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _matmul_out_dtype():
+    """§Perf lever: bf16 matmul outputs mean TP partial sums cross the ICI
+    in bf16 (half the all-reduce wire bytes).  MXU accumulation is f32
+    internally either way; only the psum payload narrows.  Enabled with
+    REPRO_BF16_PSUM=1 (measured in the hillclimb; see EXPERIMENTS §Perf)."""
+    return COMPUTE_DTYPE if os.environ.get("REPRO_BF16_PSUM") == "1" \
+        else jnp.float32
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def dense(x, w, bias=None):
+    """x @ w (+bias).  ``w`` may be a raw [d_in, d_out] matrix OR a
+    core.sparse_fc.CompressedFC (AIDA serving mode) — compression is
+    transparent to every projection in the model zoo."""
+    if type(w).__name__ == "CompressedFC":  # avoid circular import
+        from repro.core.sparse_fc import apply_fc
+        lead = x.shape[:-1]
+        y = apply_fc(w, x.reshape(-1, x.shape[-1]).astype(jnp.float32))
+        y = y.reshape(*lead, y.shape[-1])
+    else:
+        y = jnp.matmul(x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE),
+                       preferred_element_type=_matmul_out_dtype())
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(COMPUTE_DTYPE)
+
+
+def rms_norm_init(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # gemma-style (1+scale)
+
+
+def rms_norm(x, params, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(COMPUTE_DTYPE)
+
+
+def layer_norm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(x, params, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(COMPUTE_DTYPE)
+
+
+# ------------------------------------------------------------------ rotary
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding. x [B, H, T, D], positions [B, T] (absolute)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,T,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLPs
+def mlp_init(key, d: int, f: int, gated: bool = True, act: str = "silu"):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, f), "down": dense_init(ks[1], f, d)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d, f)
+    return p
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def mlp(x, p, act: str = "silu"):
+    up = dense(x, p["up"])
+    if "gate" in p:
+        up = _act(act, dense(x, p["gate"]).astype(jnp.float32)).astype(
+            COMPUTE_DTYPE) * up
+    else:
+        up = _act(act, up.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return dense(up, p["down"])
+
+
+# --------------------------------------------------------------- embedding
+def embed_init(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32)
+            * (d ** -0.5)}
+
+
+def embed(tokens, p):
+    return jnp.take(p["table"], tokens, axis=0).astype(COMPUTE_DTYPE)
+
+
+def unembed(x, p):
+    """Tied or untied head: logits = x @ table.T (f32 out, vocab-sharded)."""
+    return jnp.matmul(x.astype(COMPUTE_DTYPE),
+                      p["table"].T.astype(COMPUTE_DTYPE),
+                      preferred_element_type=jnp.float32)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

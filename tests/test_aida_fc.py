@@ -1,0 +1,92 @@
+"""Paper Fig. 3 algorithm on the bit-level AP emulator vs integer oracle,
+plus closed-form cycle-model equality (aida_sim ≡ emulator)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aida_sim as S
+from repro.core.aida_fc import (aida_fc_layer, aida_fc_layer_coded,
+                                fc_reference, fc_reference_coded)
+
+
+def sparse_int(rng, n, k, m_bits, density):
+    w = rng.integers(-(2 ** m_bits - 1), 2 ** m_bits, size=(n, k))
+    return w * (rng.random((n, k)) < density)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_bitserial_fc_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n, k = rng.integers(2, 12), rng.integers(2, 12)
+    m = nb = 4
+    w = sparse_int(rng, n, k, m, 0.5)
+    b = rng.integers(-(2 ** nb - 1), 2 ** nb, size=(k,)) \
+        * (rng.random(k) < 0.7)
+    for act in ("relu", None):
+        res = aida_fc_layer(w, b, m=m, n=nb, activation=act)
+        np.testing.assert_array_equal(res.out, fc_reference(w, b, act))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_coded_fc_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    cents_w = np.concatenate([[0], rng.integers(-99, 100, 15)])
+    cents_a = np.concatenate([[0], rng.integers(-99, 100, 15)])
+    n, k = rng.integers(3, 10), rng.integers(3, 10)
+    wc = rng.integers(0, 16, size=(n, k)) * (rng.random((n, k)) < 0.5)
+    bc = rng.integers(0, 16, size=(k,)) * (rng.random(k) < 0.6)
+    res = aida_fc_layer_coded(wc, bc, cents_w, cents_a)
+    np.testing.assert_array_equal(
+        res.out, fc_reference_coded(wc, bc, cents_w, cents_a))
+
+
+def test_cycle_model_exact_bitserial():
+    """Closed-form cycle counts == emulator counter, bit for bit."""
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        n_, k_ = rng.integers(3, 14), rng.integers(3, 14)
+        w = sparse_int(rng, n_, k_, 4, 0.5)
+        b = rng.integers(-15, 16, size=(k_,)) * (rng.random(k_) < 0.7)
+        res = aida_fc_layer(w, b, m=4, n=4)
+        ph = S.cycles_fc(k_, res.nnz_b, res.max_row_nnz, S.EMULATOR,
+                         mode="bitserial", m=4, n=4)
+        assert ph.total(S.EMULATOR) == res.cycles
+
+
+def test_cycle_model_exact_coded():
+    rng = np.random.default_rng(8)
+    cents_w = np.concatenate([[0], rng.integers(-99, 100, 15)])
+    cents_a = np.concatenate([[0], rng.integers(-99, 100, 15)])
+    for _ in range(3):
+        n_, k_ = rng.integers(4, 12), rng.integers(4, 12)
+        wc = rng.integers(0, 16, size=(n_, k_)) * (rng.random((n_, k_)) < 0.4)
+        bc = rng.integers(0, 16, size=(k_,)) * (rng.random(k_) < 0.6)
+        res = aida_fc_layer_coded(wc, bc, cents_w, cents_a)
+        pmax = int(np.abs(np.outer(cents_w, cents_a)).max())
+        ph = S.cycles_fc(k_, res.nnz_b, res.max_row_nnz, S.EMULATOR,
+                         mode="coded", m=4, n=4,
+                         prod_bits=max(1, math.ceil(math.log2(pmax + 1))))
+        assert ph.total(S.EMULATOR) == res.cycles
+
+
+def test_reduction_rounds_log():
+    """Soft reduction is logarithmic in the max row nnz (paper §3)."""
+    rng = np.random.default_rng(9)
+    w = np.zeros((2, 40), dtype=np.int64)
+    w[0, :33] = rng.integers(1, 15, 33)       # 33 nnz -> ceil(log2)=6 rounds
+    b = np.ones((40,), np.int64)
+    res = aida_fc_layer(w, b, m=4, n=1)
+    assert res.rounds == 6
+
+
+def test_multiply_cycles_quadratic_in_wordlength():
+    """Fig. 5(b): bit-serial multiply time grows quadratically."""
+    c4 = S.cycles_multiply_bitserial(4, 4, 9, S.EMULATOR)
+    c8 = S.cycles_multiply_bitserial(8, 8, 17, S.EMULATOR)
+    c16 = S.cycles_multiply_bitserial(16, 16, 33, S.EMULATOR)
+    assert 3.2 < c8 / c4 < 4.2
+    assert 3.5 < c16 / c8 < 4.2

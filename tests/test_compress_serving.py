@@ -1,0 +1,57 @@
+"""Model-level compression (Deep-Compression → AIDA serving format)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get, reduced
+from repro.models import model as M
+from repro.serve.compress import compress_params
+
+CFG = reduced(get("llama3-8b"), n_layers=2, d_model=128, d_ff=256, vocab=256)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("mode,min_ratio", [
+    ("int8", 1.8), ("codebook4", 3.5), ("aida", 3.0),
+])
+def test_compression_ratio(params, mode, min_ratio):
+    _, stats = compress_params(params, mode=mode, density=0.1, verbose=None)
+    assert stats["n_compressed"] > 0
+    assert stats["ratio"] >= min_ratio, stats
+
+
+def test_int8_decode_matches_dense(params):
+    cparams, _ = compress_params(params, mode="int8", verbose=None)
+    B, S = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, CFG.vocab)
+    std = M.init_decode_state(CFG, B, 8)
+    stc = M.init_decode_state(CFG, B, 8)
+    for t in range(S):
+        std, ld = M.decode_step(CFG, params, std, toks[:, t])
+        stc, lc = M.decode_step(CFG, cparams, stc, toks[:, t])
+    assert float((ld.argmax(-1) == lc.argmax(-1)).mean()) == 1.0
+    assert float(jnp.mean(jnp.abs(ld - lc))) < 0.05
+
+
+def test_compressed_decode_is_jittable_and_finite(params):
+    cparams, _ = compress_params(params, mode="aida", density=0.2,
+                                 verbose=None)
+    step = jax.jit(lambda p, s, t: M.decode_step(CFG, p, s, t))
+    st = M.init_decode_state(CFG, 2, 4)
+    st, lg = step(cparams, st, jnp.asarray([1, 2], jnp.int32))
+    assert bool(jnp.isfinite(lg).all())
+
+
+def test_compression_skips_norms_and_embeddings(params):
+    cparams, _ = compress_params(params, mode="int8", verbose=None)
+    # norms / embed untouched (still raw arrays)
+    assert isinstance(cparams["embed"]["table"], jax.Array)
+    l0 = cparams["layers"]["ln1"]["scale"]
+    assert isinstance(l0, jax.Array)
+    # projections ARE CompressedFC
+    assert type(cparams["layers"]["attn"]["wq"]).__name__ == "CompressedFC"

@@ -1,0 +1,156 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.acsr_spmv import acsr_spmv, block_encode, block_encode_coded
+from repro.kernels.flash_attention import (flash_attention_bwd,
+                                           flash_attention_fwd)
+from repro.kernels.linear_scan import rwkv6_fwd
+from repro.kernels.lut_matmul import lut_matmul, lut_product_matmul
+
+
+# ------------------------------------------------------------- lut_matmul
+@pytest.mark.parametrize("b,n,k,dtype", [
+    (8, 128, 256, jnp.float32),
+    (128, 256, 1024, jnp.float32),
+    (16, 128, 512, jnp.bfloat16),
+])
+def test_lut_matmul(rng, b, n, k, dtype):
+    cents = jnp.asarray(np.sort(rng.normal(size=16)).astype(np.float32))
+    codes = rng.integers(0, 16, size=(n, k)).astype(np.uint8)
+    packed = jnp.asarray(codes[:, 0::2] | (codes[:, 1::2] << 4))
+    x = jnp.asarray(rng.normal(size=(b, k))).astype(dtype)
+    out = lut_matmul(x, packed, cents, bm=8, bn=128, bk=256)
+    want = ref.lut_matmul_ref(x, packed, cents)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_lut_product_matmul(rng):
+    n, k = 128, 256
+    cents = jnp.asarray(np.sort(rng.normal(size=16)).astype(np.float32))
+    codes = rng.integers(0, 16, size=(n, k)).astype(np.uint8)
+    packed = jnp.asarray(codes[:, 0::2] | (codes[:, 1::2] << 4))
+    xc = jnp.asarray(rng.integers(0, 16, size=(8, k)).astype(np.uint8))
+    lut = jnp.outer(cents, cents)
+    out = lut_product_matmul(xc, packed, lut, bm=8, bn=128, bk=128)
+    want = ref.lut_product_matmul_ref(xc, packed, lut, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # non-multiplicative induction table (perfect induction generality)
+    lut2 = jnp.tanh(lut) + 0.1 * jnp.sign(lut)
+    out2 = lut_product_matmul(xc, packed, lut2, bm=8, bn=128, bk=128)
+    want2 = ref.lut_product_matmul_ref(xc, packed, lut2, n)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(want2),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- acsr_spmv
+@pytest.mark.parametrize("n,k,density,nb", [
+    (300, 512, 0.1, 0), (128, 256, 0.5, 0), (257, 128, 0.05, 0),
+    (300, 512, 0.1, 4),
+])
+def test_acsr_spmv(rng, n, k, density, nb):
+    w = (rng.normal(size=(n, k)) * (rng.random((n, k)) < density)
+         ).astype(np.float32)
+    x = rng.normal(size=(k,) if nb == 0 else (k, nb)).astype(np.float32)
+    blocked = block_encode(w, block_rows=128)
+    out = np.asarray(acsr_spmv(blocked, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(out, w @ x, rtol=2e-4, atol=2e-4)
+
+
+def test_acsr_spmv_coded(rng):
+    n, k = 256, 384
+    w = (rng.normal(size=(n, k)) * (rng.random((n, k)) < 0.1)
+         ).astype(np.float32)
+    nz = w[w != 0]
+    cents = np.concatenate(
+        [[0.0], np.quantile(nz, np.linspace(0.02, 0.98, 15))]
+    ).astype(np.float32)
+    blocked = block_encode_coded(w, cents, block_rows=128)
+    x = rng.normal(size=(k,)).astype(np.float32)
+    out = np.asarray(acsr_spmv(blocked, jnp.asarray(x), interpret=True))
+    wq = cents[np.abs(w[..., None] - cents).argmin(-1)] * (w != 0)
+    np.testing.assert_allclose(out, wq @ x, rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------- flash attention
+@pytest.mark.parametrize("causal,window,softcap,hkv", [
+    (True, None, None, 4), (True, 64, None, 2), (True, None, 30.0, 4),
+    (False, None, None, 1), (True, 128, 50.0, 2),
+])
+def test_flash_attention_fwd_bwd(rng, causal, window, softcap, hkv):
+    B, H, T, D = 2, 4, 128, 32
+    q = jnp.asarray(rng.normal(size=(B, H, T, D)).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.normal(size=(B, hkv, T, D)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.normal(size=(B, hkv, T, D)).astype(np.float32))
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, bq=64, bk=64)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    do = jnp.asarray(rng.normal(size=o.shape).astype(np.float32))
+    gq, gk, gv = jax.grad(
+        lambda q_, k_, v_: (ref.attention_ref(
+            q_, k_, v_, causal=causal, window=window,
+            softcap=softcap) * do).sum(), argnums=(0, 1, 2))(q, k, v)
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                     window=window, softcap=softcap,
+                                     bq=64, bk=64)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(gq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(gk),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(gv),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_attention_dtypes(rng, dtype):
+    B, H, T, D = 1, 2, 64, 64
+    q = (jnp.asarray(rng.normal(size=(B, H, T, D))) * 0.3).astype(dtype)
+    k = (jnp.asarray(rng.normal(size=(B, H, T, D))) * 0.3).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(B, H, T, D))).astype(dtype)
+    o, _ = flash_attention_fwd(q, k, v, bq=32, bk=32)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ------------------------------------------------------------ linear scan
+@pytest.mark.parametrize("t,chunk,dk,dv", [(128, 32, 16, 16),
+                                           (64, 64, 32, 64),
+                                           (96, 16, 8, 8)])
+def test_rwkv6_kernel(rng, t, chunk, dk, dv):
+    B, H = 2, 2
+    r = jnp.asarray(rng.normal(size=(B, H, t, dk)).astype(np.float32)) * .5
+    k = jnp.asarray(rng.normal(size=(B, H, t, dk)).astype(np.float32)) * .5
+    v = jnp.asarray(rng.normal(size=(B, H, t, dv)).astype(np.float32))
+    w = jnp.asarray(np.exp(-np.exp(rng.normal(size=(B, H, t, dk))))
+                    .astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(H, dk)).astype(np.float32))
+    o = rwkv6_fwd(r, k, v, w, u, chunk=chunk)
+    want = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv6_kernel_tiny_decay(rng):
+    """Extreme decays (w→0) stay numerically exact (the sequential-in-chunk
+    design choice vs cumprod factorization — DESIGN.md)."""
+    B, H, T, D = 1, 1, 64, 8
+    r = jnp.ones((B, H, T, D)) * 0.1
+    k = jnp.ones((B, H, T, D)) * 0.1
+    v = jnp.ones((B, H, T, D))
+    w = jnp.full((B, H, T, D), 1e-9)
+    u = jnp.zeros((H, D))
+    o = rwkv6_fwd(r, k, v, w, u, chunk=16)
+    want = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,85 @@
+"""Codebook / int quantization / CompressedFC modes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codebook as cb
+from repro.core import quant as q
+from repro.core import sparse_fc as sfc
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 64), seed=st.integers(0, 99))
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 16, size=(4, 2 * n)).astype(np.uint8))
+    np.testing.assert_array_equal(np.asarray(cb.unpack4(cb.pack4(codes))),
+                                  np.asarray(codes))
+
+
+def test_kmeans_reduces_error(rng):
+    x = jnp.asarray(rng.normal(size=4096).astype(np.float32))
+    cents = cb.kmeans_1d(x, k=16, iters=20)
+    codes = cb.assign(x, cents)
+    err16 = float(jnp.mean((jnp.take(cents, codes.astype(jnp.int32)) - x) ** 2))
+    cents4 = cb.kmeans_1d(x, k=4, iters=20)
+    codes4 = cb.assign(x, cents4)
+    err4 = float(jnp.mean((jnp.take(cents4, codes4.astype(jnp.int32)) - x) ** 2))
+    assert err16 < err4 < float(jnp.var(x))
+    assert err16 < 0.02  # 16 clusters on a unit gaussian
+
+
+def test_quantize_dequantize_shapes(rng):
+    w = jnp.asarray(rng.normal(size=(32, 64)).astype(np.float32))
+    cbq = cb.quantize(w, k=16)
+    deq = cb.dequantize(cbq)
+    assert deq.shape == w.shape
+    assert float(jnp.mean((deq - w) ** 2)) < 0.05
+
+
+def test_product_lut_is_outer_product(rng):
+    cw = jnp.asarray(rng.normal(size=16).astype(np.float32))
+    ca = jnp.asarray(rng.normal(size=16).astype(np.float32))
+    lut = cb.product_lut(cw, ca)
+    for i in (0, 5, 15):
+        for j in (0, 7, 15):
+            assert np.isclose(float(lut[i, j]), float(cw[i]) * float(ca[j]))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_int_quant_error_bound(rng, bits):
+    w = jnp.asarray(rng.normal(size=(16, 128)).astype(np.float32))
+    t = q.quantize_int(w, bits=bits, axis=0)
+    err = np.abs(np.asarray(q.dequantize_int(t)) - np.asarray(w))
+    step = np.asarray(t.scale).max()
+    assert err.max() <= step * 0.500001
+
+
+def test_ternary(rng):
+    w = jnp.asarray(rng.normal(size=(1024,)).astype(np.float32))
+    t = q.quantize_ternary(w)
+    vals = np.unique(np.asarray(t.q))
+    assert set(vals).issubset({-1, 0, 1})
+
+
+@pytest.mark.parametrize("mode", sfc.MODES)
+def test_compressed_fc_self_consistent(rng, mode):
+    """apply_fc(x) == x @ dense_equivalent.T for every mode."""
+    w = rng.normal(size=(128, 256)).astype(np.float32)
+    x = rng.normal(size=(4, 256)).astype(np.float32)
+    layer = sfc.compress(w, mode=mode, density=0.25)
+    y = np.asarray(sfc.apply_fc(layer, jnp.asarray(x)))
+    weq = sfc.dense_equivalent(layer)
+    np.testing.assert_allclose(y, x @ weq.T, rtol=2e-3, atol=2e-3)
+
+
+def test_aida_mode_on_actually_sparse_weights(rng):
+    """On genuinely sparse weights the AIDA path is near-exact."""
+    w = (rng.normal(size=(128, 256)) * (rng.random((128, 256)) < 0.1)
+         ).astype(np.float32)
+    x = rng.normal(size=(256,)).astype(np.float32)
+    layer = sfc.compress(w, mode="aida", density=1.0)  # keep all nnz
+    y = np.asarray(sfc.apply_fc(layer, jnp.asarray(x)))
+    rel = np.abs(y - w @ x).max() / (np.abs(w @ x).max() + 1e-9)
+    assert rel < 0.15  # codebook-16 quantization error only

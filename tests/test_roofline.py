@@ -1,0 +1,76 @@
+"""Roofline machinery: HLO collective parsing + model-flops accounting."""
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get
+from repro.roofline import analysis as RA
+
+HLO = """
+HloModule jit_step
+  %all-reduce = f32[512,4096]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+  %ag = bf16[1024,128]{1,0} all-gather(%p0), channel_id=2, replica_groups=[4,2]<=[8], dimensions={0}
+  %rs = f32[64,64]{1,0} reduce-scatter(%x), channel_id=3, replica_groups=[1,16]<=[16], to_apply=%add
+  %cp = bf16[32,32]{1,0} collective-permute(%y), channel_id=4, source_target_pairs={{0,1},{1,0}}
+  %aa = f32[128]{0} all-to-all(%z), channel_id=5, replica_groups=[2,4]<=[8]
+  %ar-start = f32[16]{0} all-reduce-start(%w), channel_id=6, replica_groups=[2,4]<=[8], to_apply=%add
+  %ar-done = f32[16]{0} all-reduce-done(%ar-start)
+  %dot2 = f32[10,10]{1,0} dot(%a, %b)
+"""
+
+
+def test_parse_collective_bytes():
+    out = RA.parse_collective_bytes(HLO)
+    # all-reduce: 512*4096*4 B * 2*(3/4) ring + start op 16*4*1.5
+    ar = 512 * 4096 * 4
+    assert out["all-reduce"] == int(2 * ar * 3 / 4) + int(2 * 16 * 4 * 3 / 4)
+    ag = 1024 * 128 * 2
+    assert out["all-gather"] == int(ag * 1 / 2)  # group size 2
+    rs = 64 * 64 * 4
+    assert out["reduce-scatter"] == int(rs * 16 * 15 / 16)
+    assert out["collective-permute"] == 32 * 32 * 2
+    assert out["all-to-all"] == int(128 * 4 * 3 / 4)
+
+
+def test_parse_ignores_non_collectives():
+    out = RA.parse_collective_bytes("%d = f32[8,8]{1,0} dot(%a, %b)")
+    assert sum(out.values()) == 0
+
+
+def test_model_flops_conventions():
+    cfg = get("llama3-8b")
+    n = cfg.active_params_count()
+    tr = RA.model_flops(cfg, SHAPES["train_4k"])
+    pf = RA.model_flops(cfg, SHAPES["prefill_32k"])
+    de = RA.model_flops(cfg, SHAPES["decode_32k"])
+    assert tr == 6.0 * n * 256 * 4096
+    assert pf == 2.0 * n * 32 * 32768
+    assert de == 2.0 * n * 128
+    # MoE: active < total
+    moe = get("mixtral-8x7b")
+    assert moe.active_params_count() < moe.params_count() * 0.45
+
+
+def test_roofline_terms_and_bottleneck():
+    r = RA.Roofline(arch="x", shape="train_4k", mesh="single", chips=256,
+                    hlo_flops=197e12 * 0.05,          # 50 ms compute
+                    hlo_bytes=819e9 * 0.1,            # 100 ms memory
+                    coll_bytes={"all-reduce": int(50e9 * 0.02)},  # 20 ms
+                    model_flops=197e12 * 0.04 * 256)
+    assert abs(r.t_compute - 0.05) < 1e-9
+    assert abs(r.t_memory - 0.1) < 1e-9
+    assert abs(r.t_collective - 0.02) < 1e-9
+    assert r.bottleneck == "memory"
+    assert abs(r.useful_flops_frac - 0.8) < 1e-9
+    assert abs(r.roofline_frac - 0.4) < 1e-9
+
+
+def test_params_count_sanity():
+    """Config param counts within 15% of the published model sizes."""
+    approx = {
+        "llama3-8b": 8.0e9, "qwen1.5-0.5b": 0.46e9, "gemma2-2b": 2.6e9,
+        "mixtral-8x7b": 46.7e9, "dbrx-132b": 132e9, "rwkv6-7b": 7.6e9,
+        "h2o-danube-1.8b": 1.8e9,
+    }
+    for name, want in approx.items():
+        got = get(name).params_count()
+        assert 0.7 < got / want < 1.35, (name, got, want)
