@@ -1,15 +1,58 @@
-"""Benchmark runner — one section per paper table/figure + kernel accounting.
+"""Benchmark runner — one section per paper table/figure + kernel accounting,
+plus the unified-API backend benchmark (machine-readable BENCH_api.json).
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run [--api-only]
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 
+def bench_api(out_path: str = "BENCH_api.json") -> dict:
+    """Serve + cost-model every backend through `repro.api.Engine` and
+    write tokens/s + cycle counts to `out_path` so future PRs have a perf
+    trajectory to compare against."""
+    from repro.api import Engine
+    from repro.configs import get, reduced
+
+    cfg = reduced(get("llama3-8b"), n_layers=2, d_model=128, d_ff=256,
+                  vocab=512)
+    eng = Engine(cfg)
+    data = eng.benchmark(modes=("dense", "int8", "codebook4", "acsr",
+                                "aida"),
+                         requests=4, max_new=8, batch_slots=2)
+    data["meta"] = {"arch": cfg.name, "host": "cpu-interpret",
+                    "note": "tok/s on host CPU interpret-mode kernels — "
+                            "trajectory signal, not TPU perf"}
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    for mode, rec in data["modes"].items():
+        print(f"  {mode:10s} [{rec['backend']:9s}] {rec['tok_per_s']:8.1f} "
+              f"tok/s  ratio {rec['compression_ratio']:.2f}x")
+    sim = data["backends"]["cycle-sim"]
+    print(f"  ap-emulator FC cycles: "
+          f"{data['backends']['ap-emulator']['fc_cycles']}  "
+          f"cycle-sim: {sim['fc_cycles']} "
+          f"(agree: {sim['agrees_with_emulator']})")
+    print(f"  AlexNet-FC cycle-sim: AIDA {sim['alexnet_fc_cycles']} cyc "
+          f"({sim['alexnet_fc_inf_per_s']:.0f} inf/s) vs "
+          f"EIE {sim['eie_alexnet_fc_cycles']} cyc "
+          f"({sim['eie_alexnet_fc_inf_per_s']:.0f} inf/s)")
+    print(f"  -> wrote {out_path}")
+    return data
+
+
 def main() -> int:
     t0 = time.time()
+    if "--api-only" in sys.argv:
+        print("=" * 72)
+        print("API — unified facade backend benchmark (repro.api.Engine)")
+        print("=" * 72)
+        bench_api()
+        print(f"\n[benchmarks] done in {time.time()-t0:.0f}s")
+        return 0
     from benchmarks import fig5, kernels_bench, table1
 
     print("=" * 72)
@@ -64,6 +107,12 @@ def main() -> int:
           "path, not TPU perf):")
     kernels_bench.wallclock()
     kernels_bench.attention_bench()
+
+    print()
+    print("=" * 72)
+    print("API — unified facade backend benchmark (repro.api.Engine)")
+    print("=" * 72)
+    bench_api()
 
     print(f"\n[benchmarks] done in {time.time()-t0:.0f}s")
     return 0 if ok else 1

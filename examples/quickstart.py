@@ -4,12 +4,11 @@
 """
 import jax
 
+from repro.api import Engine, Request
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import get, reduced
 from repro.data.pipeline import DataIterator, PipelineConfig
-from repro.models import model as M
 from repro.optim.adamw import AdamWConfig
-from repro.serve.engine import Request, ServeEngine
 from repro.train import trainer
 
 
@@ -30,10 +29,10 @@ def main():
     mgr.wait()
     print(f"checkpoints: steps {mgr.list_steps()}")
 
-    eng = ServeEngine(cfg, state.params, batch_slots=2, max_len=64)
-    for rid in range(3):
-        eng.submit(Request(prompt=[1, 2 + rid, 3], max_new=8, rid=rid))
-    for r in eng.run():
+    eng = Engine(cfg, params=state.params)
+    reqs = [Request(prompt=[1, 2 + rid, 3], max_new=8, rid=rid)
+            for rid in range(3)]
+    for r in eng.serve(reqs, batch_slots=2, max_len=64):
         print(f"request {r.rid}: {r.tokens}")
 
 

@@ -4,6 +4,7 @@ Pipeline: train a small model briefly → Deep-Compression (prune + 16-entry
 weight sharing, paper §3 / EIE) every projection → serve batched requests
 through the compressed decode path (Pallas ACSR/LUT kernels) → report
 compression ratio, logit fidelity and agreement vs the dense model.
+Everything runs through the `repro.api.Engine` facade.
 
   PYTHONPATH=src python examples/serve_aida.py [--mode aida|codebook4|int8]
 """
@@ -14,12 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import CompressionSpec, Engine, Request
 from repro.configs import get, reduced
 from repro.data.pipeline import DataIterator, PipelineConfig
 from repro.models import model as M
 from repro.optim.adamw import AdamWConfig
-from repro.serve.compress import compress_params
-from repro.serve.engine import Request, ServeEngine
 from repro.train import trainer
 
 
@@ -45,10 +45,11 @@ def main():
 
     print(f"\n== Deep-Compression -> {args.mode} "
           f"(density {args.density}) ==")
-    cparams, stats = compress_params(state.params, mode=args.mode,
-                                     density=args.density)
-    print(f"  projections compressed: {stats['n_compressed']}  "
-          f"weight-memory ratio vs bf16: {stats['ratio']:.1f}x")
+    eng = Engine(cfg, params=state.params).compress(
+        CompressionSpec(mode=args.mode, density=args.density))
+    print(f"  projections compressed: {eng.stats['n_compressed']}  "
+          f"weight-memory ratio vs bf16: {eng.stats['ratio']:.1f}x  "
+          f"(backend: {eng.backend.name})")
 
     print("\n== fidelity: compressed vs dense decode ==")
     B, S = 4, 24
@@ -58,23 +59,22 @@ def main():
     agree, err = [], []
     for t in range(S):
         std, ld = M.decode_step(cfg, state.params, std, toks[:, t])
-        stc, lc = M.decode_step(cfg, cparams, stc, toks[:, t])
+        stc, lc = M.decode_step(cfg, eng.params, stc, toks[:, t])
         agree.append(float((ld.argmax(-1) == lc.argmax(-1)).mean()))
         err.append(float(jnp.mean(jnp.abs(ld - lc))))
     print(f"  next-token argmax agreement: {np.mean(agree):.1%}  "
           f"mean |logit delta|: {np.mean(err):.4f}")
 
     print("\n== batched serving on the compressed model ==")
-    eng = ServeEngine(cfg, cparams, batch_slots=4, max_len=64)
-    for rid in range(8):
-        eng.submit(Request(prompt=[1, 2 + rid, 3, 4], max_new=8, rid=rid))
+    reqs = [Request(prompt=[1, 2 + rid, 3, 4], max_new=8, rid=rid)
+            for rid in range(8)]
     t0 = time.perf_counter()
-    results = eng.run()
+    results = eng.serve(reqs, batch_slots=4, max_len=64)
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.tokens) for r in results) + 8 * 4
     print(f"  served {len(results)} requests, "
           f"{n_tok/dt:.1f} tok/s (host CPU, interpret-mode kernels)")
-    for r in sorted(results, key=lambda r: r.rid)[:3]:
+    for r in results[:3]:
         print(f"  req {r.rid}: {r.tokens}")
 
 

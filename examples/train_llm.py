@@ -10,6 +10,7 @@ import dataclasses
 
 import jax
 
+from repro.api import Engine, Request
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import get, reduced
 from repro.data.pipeline import DataIterator, PipelineConfig
@@ -46,6 +47,8 @@ def main():
     mgr = CheckpointManager(args.ckpt_dir, keep_last=3)
     straggler = StragglerDetector()
 
+    final = {}
+
     def run_fn(resume_step):
         start = 0
         state = None
@@ -57,14 +60,23 @@ def main():
             print(f"[resume] from checkpoint step {resume_step}, "
                   f"data step {start}")
         data = DataIterator(cfg, pc, start_step=start)
-        trainer.run(cfg, tc, data, n_steps=args.steps - start,
-                    state=state, key=jax.random.PRNGKey(0), ckpt_mgr=mgr,
-                    ckpt_every=10, straggler=straggler, log_every=5)
+        final["state"] = trainer.run(
+            cfg, tc, data, n_steps=args.steps - start,
+            state=state, key=jax.random.PRNGKey(0), ckpt_mgr=mgr,
+            ckpt_every=10, straggler=straggler, log_every=5)
 
     RestartLoop(mgr, max_restarts=2).supervise(run_fn)
     mgr.wait()
     print(f"done; checkpoints at {mgr.list_steps()}; "
           f"straggler events: {straggler.flags}")
+
+    if final.get("state") is not None and cfg.has_decode:
+        # decode smoke on the trained weights through the serving facade
+        eng = Engine(cfg, params=final["state"].params)
+        res = eng.serve([Request(prompt=[1, 2, 3], max_new=8, rid=0)],
+                        batch_slots=1, max_len=32)
+        print(f"[api] decode smoke via Engine ({eng.backend.name}): "
+              f"{res[0].tokens}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,49 @@
+"""`repro.api` — the unified engine facade.
+
+THE way to compress, load, run and benchmark a model at any of the paper's
+operating points (dense / int8 / codebook4 / acsr / aida), on any
+registered backend (`jax-dense`, `pallas`, `ap-emulator`, `cycle-sim`)::
+
+    from repro.api import Engine, Request, CompressionSpec
+
+    eng = Engine(cfg).compress(CompressionSpec(mode="aida", density=0.25))
+    results = eng.serve([Request(prompt=[1, 2, 3], max_new=8)])
+    table1 = eng.estimate(backend="cycle-sim", workload="table1")
+
+The light value types (CompressionSpec, FCProblem, registry) import
+eagerly; Engine/Session (which pull in jax + the model zoo) load lazily via
+PEP 562 so that `models.layers` can import `repro.api.dispatch` at module
+scope without a cycle.
+"""
+from repro.api.registry import (BackendRegistry, Capabilities,  # noqa: F401
+                                CapabilityError, Executor, backend_names,
+                                get_backend, register_backend)
+from repro.api.spec import (MODES, WORKLOADS, CompressionSpec,  # noqa: F401
+                            FCProblem)
+
+__all__ = [
+    "Engine", "Session", "Request", "Result", "compress_params",
+    "CompressionSpec", "FCProblem", "MODES", "WORKLOADS",
+    "BackendRegistry", "Capabilities", "CapabilityError", "Executor",
+    "backend_names", "get_backend", "register_backend",
+]
+
+_LAZY = {
+    "Engine": ("repro.api.engine", "Engine"),
+    "Session": ("repro.api.session", "Session"),
+    "Request": ("repro.api.session", "Request"),
+    "Result": ("repro.api.session", "Result"),
+    "compress_params": ("repro.api.compress", "compress_params"),
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

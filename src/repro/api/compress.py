@@ -1,0 +1,108 @@
+"""Model-level Deep-Compression pipeline: turn trained dense params into
+AIDA serving format (prune -> k-means share -> pack), per projection.
+
+Stacked layer weights [L, d_in, d_out] become stacked CompressedFC pytrees
+(uniform padded nnz across layers so the scan-over-layers decode still
+works); `models.layers.dense` dispatches on the leaf type via
+`repro.api.dispatch`, so EVERY architecture's projections can serve
+compressed — the paper's "FC layers of DNN" surface, generalized to the zoo.
+
+This is the facade-owned implementation; `repro.serve.compress` is a
+deprecated shim over it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.spec import CompressionSpec
+from repro.core import sparse_fc as sfc
+from repro.kernels import acsr_spmv as sp
+
+# projection leaves eligible for compression (2D per layer, stacked to 3D)
+TARGET_SUFFIXES = ("wq", "wk", "wv", "wo", "up", "down", "gate",
+                   "wr", "wg", "in_proj", "out_proj")
+SKIP_SUBSTR = ("ln", "mu", "bq", "bk", "bv", "conv", "A_log", "dt",
+               "router", "x_db", "w_A", "w_B", "embed")
+
+
+def _stack_compressed(per_layer: List[sfc.CompressedFC]) -> sfc.CompressedFC:
+    """Stack per-layer CompressedFC into one scan-compatible pytree."""
+    mode = per_layer[0].mode
+    if mode in ("acsr", "aida"):
+        me = max(c.blocked.me for c in per_layer)
+        padded = []
+        for c in per_layer:
+            b = c.blocked
+            pad = me - b.me
+            padded.append(sp.BlockedACSR(
+                values=jnp.pad(b.values, ((0, 0), (0, pad))),
+                col_idx=jnp.pad(b.col_idx, ((0, 0), (0, pad))),
+                seg_local=jnp.pad(b.seg_local, ((0, 0), (0, pad)),
+                                  constant_values=b.block_rows),
+                shape=b.shape, block_rows=b.block_rows, nnz=b.nnz,
+                centroids=b.centroids))
+        blocked = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+        blocked = dataclasses.replace(blocked, nnz=-1)
+        return sfc.CompressedFC(mode=mode, shape=per_layer[0].shape,
+                                blocked=blocked)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def compress_params(params: Dict, spec: CompressionSpec = None, *,
+                    mode: str = None, density: float = None, k: int = None,
+                    verbose=print) -> Tuple[Dict, Dict]:
+    """Replace every eligible stacked projection in params['layers'] with a
+    stacked CompressedFC per `spec`.  Returns (new_params, stats).
+
+    `spec` may be a CompressionSpec, a bare mode string, or None; the
+    keyword shortcuts (mode/density/k) override the matching spec fields.
+    """
+    spec = CompressionSpec.coerce(mode if spec is None and mode else spec)
+    updates = {kk: v for kk, v in
+               [("mode", mode), ("density", density), ("k", k)]
+               if v is not None}
+    if updates:
+        spec = dataclasses.replace(spec, **updates)
+    stats = {"n_compressed": 0, "bytes_dense": 0, "bytes_compressed": 0,
+             "modes": {}, "spec": spec}
+
+    def leaf_bytes(tree):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+    def transform(path, leaf):
+        name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+        pstr = "/".join(str(getattr(p, "key", p)) for p in path)
+        if leaf.ndim != 3 or not name.endswith(TARGET_SUFFIXES):
+            return leaf
+        if any(s in pstr for s in SKIP_SUBSTR):
+            return leaf
+        leaf_mode = spec.mode_for(pstr)
+        if leaf_mode == "skip":
+            return leaf
+        L = leaf.shape[0]
+        per = [sfc.compress(np.asarray(leaf[i]).T, mode=leaf_mode,
+                            density=spec.density, k=spec.k,
+                            block_rows=spec.block_rows,
+                            kmeans_iters=spec.kmeans_iters)
+               for i in range(L)]
+        out = _stack_compressed(per)
+        stats["n_compressed"] += L
+        stats["modes"][leaf_mode] = stats["modes"].get(leaf_mode, 0) + L
+        stats["bytes_dense"] += leaf.size * 2  # bf16-serving baseline
+        stats["bytes_compressed"] += leaf_bytes(out)
+        if verbose:
+            verbose(f"  compressed {pstr} {tuple(leaf.shape)} [{leaf_mode}]")
+        return out
+
+    new_layers = jax.tree_util.tree_map_with_path(transform,
+                                                  params["layers"])
+    out = dict(params)
+    out["layers"] = new_layers
+    stats["ratio"] = (stats["bytes_dense"]
+                      / max(stats["bytes_compressed"], 1))
+    return out, stats

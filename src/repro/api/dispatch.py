@@ -1,0 +1,35 @@
+"""Projection-leaf dispatch — the facade's FC mode dispatch point.
+
+`models.layers.dense` consults this table instead of hard-coding leaf
+types: a param leaf whose type name is registered here is applied through
+its registered function (e.g. a core.sparse_fc.CompressedFC routes to
+`apply_fc`, which picks the dense/int8/codebook4/acsr/aida path).  New
+compressed representations plug in with `register_applier` — no model
+code changes.
+
+Import-light on purpose: models.layers imports this at module scope, so
+nothing here may import the model zoo (appliers lazy-import their kernels).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+_APPLIERS: Dict[str, Callable] = {}
+
+
+def register_applier(type_name: str, fn: Callable) -> None:
+    """Register `fn(leaf, x2d) -> y2d` for param leaves of `type_name`."""
+    _APPLIERS[type_name] = fn
+
+
+def applier_for(leaf) -> Optional[Callable]:
+    """The registered applier for this leaf, or None for raw matrices."""
+    return _APPLIERS.get(type(leaf).__name__)
+
+
+def _apply_compressed_fc(leaf, x):
+    from repro.core.sparse_fc import apply_fc
+    return apply_fc(leaf, x)
+
+
+register_applier("CompressedFC", _apply_compressed_fc)

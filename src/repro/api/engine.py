@@ -1,0 +1,199 @@
+"""`Engine` — THE entry point to compress, load, run and benchmark a model.
+
+One object, four backends::
+
+    from repro.api import Engine, Request, CompressionSpec
+
+    eng = Engine("llama3-8b-smoke-cfg-or-ArchConfig")      # random init
+    eng.compress(CompressionSpec(mode="aida", density=0.25))
+    results = eng.serve([Request(prompt=[1, 2, 3], max_new=8)])
+    est = eng.estimate(backend="cycle-sim", workload="alexnet-fc")
+
+`compress()` returns the engine for chaining; serving goes through a
+continuous-batching `Session` compiled by the active backend; `estimate()`
+routes to any cycle-accounting backend (`ap-emulator`, `cycle-sim`).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.api import compress as compress_mod
+from repro.api.registry import CapabilityError, Executor, get_backend
+from repro.api.session import Request, Result, Session
+from repro.api.spec import CompressionSpec, FCProblem
+from repro.configs.base import ArchConfig
+
+
+def _spec_modes(spec: CompressionSpec) -> set:
+    """Modes a spec actually executes ('skip' leaves leaves dense/raw)."""
+    return {spec.mode} | {m for m in spec.overrides.values() if m != "skip"}
+
+
+class Engine:
+    def __init__(self, cfg: Union[ArchConfig, str, None] = None,
+                 params=None, *, backend: Optional[str] = None,
+                 seed: int = 0):
+        if isinstance(cfg, str):
+            from repro.configs import get
+            cfg = get(cfg)
+        self.cfg = cfg
+        self._params = params
+        self._backend_name = backend
+        self._seed = seed
+        self.compression: Optional[CompressionSpec] = None
+        self.stats: Optional[dict] = None
+
+    # -------------------------------------------------------------- state
+    @property
+    def params(self):
+        """Model params (random-initialized on first access if not given)."""
+        if self._params is None:
+            if self.cfg is None:
+                raise ValueError("Engine has no cfg; pass params explicitly "
+                                 "or construct with an ArchConfig")
+            import jax
+            from repro.models import model as M
+            self._params = M.init_params(self.cfg,
+                                         jax.random.PRNGKey(self._seed))
+        return self._params
+
+    @property
+    def backend(self) -> Executor:
+        """Active decode backend: explicit choice, else 'pallas' once
+        compressed to a non-dense mode, else 'jax-dense'."""
+        if self._backend_name:
+            return get_backend(self._backend_name)
+        if self.compression is not None \
+                and _spec_modes(self.compression) - {"dense"}:
+            return get_backend("pallas")
+        return get_backend("jax-dense")
+
+    # ---------------------------------------------------------- compress
+    def compress(self, spec: Union[CompressionSpec, str, None] = None,
+                 *, verbose=None, **kw) -> "Engine":
+        """Deep-Compression of every eligible projection (prune -> share ->
+        pack) per `spec`; keyword shortcuts (mode=, density=, k=) also work.
+        Returns self for chaining; stats land in `self.stats`."""
+        spec = CompressionSpec.coerce(spec)
+        if kw:
+            import dataclasses
+            spec = dataclasses.replace(spec, **kw)
+        if self._backend_name:  # explicit pin: the backend must run the modes
+            caps = self.backend.caps
+            wanted = _spec_modes(spec)
+            if len(wanted) > 1 and not caps.per_layer_override:
+                raise CapabilityError(
+                    f"backend {self._backend_name!r} does not support "
+                    "per-layer mode overrides")
+            missing = wanted - set(caps.modes)
+            if missing:
+                raise CapabilityError(
+                    f"backend {self._backend_name!r} cannot execute modes "
+                    f"{sorted(missing)}; its modes are {caps.modes} "
+                    "(drop the explicit backend= pin to auto-route)")
+        self._params, self.stats = compress_mod.compress_params(
+            self.params, spec, verbose=verbose)
+        self.compression = spec
+        return self
+
+    # ------------------------------------------------------------- serve
+    def session(self, batch_slots: int = 4, max_len: int = 256,
+                seed: int = 0) -> Session:
+        """A continuous-batching serving session on the active backend."""
+        if self.cfg is None:
+            raise ValueError("serving needs an ArchConfig")
+        backend = self.backend
+        if not backend.caps.batched_decode:
+            raise CapabilityError(
+                f"backend {backend.name!r} cannot serve (no batched decode)")
+        return Session(self.cfg, self.params, batch_slots=batch_slots,
+                       max_len=max_len, seed=seed, backend=backend)
+
+    def serve(self, requests: Sequence[Union[Request, List[int]]],
+              *, batch_slots: int = 4, max_len: int = 256,
+              max_steps: int = 10_000, seed: int = 0) -> List[Result]:
+        """Serve a batch of requests to completion (continuous batching).
+        Results come back in deterministic rid order."""
+        sess = self.session(batch_slots=batch_slots, max_len=max_len,
+                            seed=seed)
+        for rid, req in enumerate(requests):
+            if not isinstance(req, Request):
+                req = Request(prompt=list(req), rid=rid)
+            sess.submit(req)
+        return sess.run(max_steps=max_steps)
+
+    # ---------------------------------------------------------- estimate
+    def estimate(self, backend: str = "cycle-sim",
+                 workload: Union[FCProblem, str, Sequence, None] = None,
+                 **kw) -> dict:
+        """Cycle/perf accounting through a cost-model backend.
+
+        `workload`: an FCProblem (concrete FC instance; 'ap-emulator'
+        measures it bit-level, 'cycle-sim' prices it closed-form — the two
+        agree exactly under the EMULATOR microcode), or a named network
+        ('alexnet-fc', 'ctc-lstm', 'table1') for 'cycle-sim'.
+        """
+        ex = get_backend(backend)
+        if not ex.caps.cycle_accounting:
+            raise CapabilityError(
+                f"backend {backend!r} has no cycle accounting")
+        if workload is None:
+            workload = "alexnet-fc"
+        return ex.estimate(workload, **kw)
+
+    # --------------------------------------------------------- benchmark
+    def benchmark(self, modes: Sequence[str] = ("dense", "aida"),
+                  requests: int = 4, max_new: int = 8,
+                  batch_slots: int = 2, density: float = 0.25,
+                  problem: Optional[FCProblem] = None) -> dict:
+        """Serve each mode through the facade and price the cost-model
+        backends on one FC instance; returns a JSON-ready dict
+        (benchmarks/run.py writes it to BENCH_api.json)."""
+        out = {"backends": {}, "modes": {}}
+        reqs = [Request(prompt=[1, 2 + i % 7, 3], max_new=max_new, rid=i)
+                for i in range(requests)]
+        for mode in modes:
+            eng = Engine(self.cfg, params=self.params)
+            if mode != "dense":
+                eng.compress(CompressionSpec(mode=mode, density=density))
+            sess = eng.session(batch_slots=batch_slots,
+                               max_len=max_new + 8)
+            sess.submit(Request(prompt=[1], max_new=1, rid=-1))
+            sess.run()  # warm the compiled step
+            sess.results.clear()
+            for r in reqs:
+                sess.submit(r)
+            t0 = time.perf_counter()
+            res = sess.run()
+            dt = time.perf_counter() - t0
+            n_tok = sum(len(r.tokens) for r in res)
+            out["modes"][mode] = {
+                "backend": eng.backend.name,
+                "tokens": n_tok, "seconds": round(dt, 4),
+                "tok_per_s": round(n_tok / dt, 2),
+                "compression_ratio": (round(eng.stats["ratio"], 2)
+                                      if eng.stats else 1.0)}
+        if problem is None:
+            rng = np.random.default_rng(0)
+            w = rng.integers(-15, 16, size=(24, 32)) \
+                * (rng.random((24, 32)) < 0.3)
+            b = rng.integers(-15, 16, size=(32,)) * (rng.random(32) < 0.6)
+            problem = FCProblem(w=w, b=b, m=4, n=4)
+        emu = self.estimate(backend="ap-emulator", workload=problem)
+        sim = self.estimate(backend="cycle-sim", workload=problem)
+        alex = self.estimate(backend="cycle-sim", workload="alexnet-fc")
+        eie = self.estimate(backend="cycle-sim", workload="alexnet-fc",
+                            simulator="eie")
+        out["backends"]["ap-emulator"] = {
+            "fc_cycles": int(emu["cycles"]), "exact": emu["exact"]}
+        out["backends"]["cycle-sim"] = {
+            "fc_cycles": int(sim["cycles"]),
+            "agrees_with_emulator": int(sim["cycles"]) == int(emu["cycles"]),
+            "alexnet_fc_cycles": int(alex["cycles"]),
+            "alexnet_fc_inf_per_s": round(alex["inf_per_s"], 1),
+            "eie_alexnet_fc_cycles": int(eie["cycles"]),
+            "eie_alexnet_fc_inf_per_s": round(eie["inf_per_s"], 1)}
+        return out

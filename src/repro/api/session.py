@@ -1,0 +1,147 @@
+"""Serving session: continuous batching over a fixed-slot decode batch.
+
+Requests occupy slots, finished slots are refilled from the queue without
+stopping the batch (continuous batching).  Prefill is chunk-free
+(token-by-token through the decode path) to keep one compiled step;
+prompts for a slot are fed before its generation starts.  Greedy or
+temperature sampling.
+
+Sessions are created by `repro.api.Engine.session()` (or directly); the
+compiled decode step comes from the engine's backend, so dense and
+compressed (Pallas) serving share one code path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import Executor, get_backend
+from repro.configs.base import ArchConfig
+
+# Compiled decode steps keyed by (backend, cfg): sessions on the same
+# config reuse one jitted step (its trace cache handles dense vs
+# compressed param structures), so spinning up a Session is cheap.
+_STEP_CACHE: dict = {}
+
+
+def _jitted_step(backend: Executor, cfg: ArchConfig):
+    key = (backend.name, cfg)
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = jax.jit(backend.make_decode_step(cfg))
+    return _STEP_CACHE[key]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new: int = 16
+    temperature: float = 0.0
+    rid: int = 0
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    tokens: List[int]
+
+
+class Session:
+    def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
+                 max_len: int = 256, seed: int = 0,
+                 backend: Optional[Executor] = None):
+        assert cfg.has_decode, "encoder archs don't serve autoregressively"
+        from repro.models import model as M
+        self.cfg, self.params = cfg, params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.state = M.init_decode_state(cfg, batch_slots, max_len)
+        self.key = jax.random.PRNGKey(seed)
+        if backend is None or isinstance(backend, str):
+            backend = get_backend(backend or "jax-dense")
+        self.backend = backend
+        self._step = _jitted_step(backend, cfg)
+        # per-slot bookkeeping (host side)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_pending: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.slot_out: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.queue: Deque[Request] = collections.deque()
+        self.results: List[Result] = []
+        self.stats = {"steps": 0, "fills": 0}
+
+    # ------------------------------------------------------------ public
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Result]:
+        """Drain the queue; returns all results in deterministic rid order."""
+        for _ in range(max_steps):
+            self._fill_slots()
+            if all(r is None for r in self.slot_req):
+                break
+            self._advance()
+        return sorted(self.results, key=lambda r: r.rid)
+
+    # ----------------------------------------------------------- internals
+    def _fill_slots(self):
+        for i in range(self.slots):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slot_req[i] = req
+                self.slot_pending[i] = list(req.prompt)
+                self.slot_out[i] = []
+                self._reset_slot_state(i)
+                self.stats["fills"] += 1
+
+    def _reset_slot_state(self, i: int):
+        def zero_slot(x):
+            if x.ndim >= 2 and x.shape[1] == self.slots:  # [L, B, ...]
+                return x.at[:, i].set(jnp.zeros_like(x[:, i]))
+            return x
+        layers = jax.tree.map(zero_slot, self.state["layers"])
+        pos = self.state["pos"].at[i].set(0)
+        # empty cache slots must read as "never written": pos fields are -1
+        if self.cfg.family not in ("rwkv6",):
+            layers = dict(layers)
+            kv = layers["kv"]
+            layers["kv"] = kv._replace(
+                pos=kv.pos.at[:, i].set(-jnp.ones_like(kv.pos[:, i])))
+        self.state = {"layers": layers, "pos": pos}
+
+    def _advance(self):
+        tokens = np.zeros((self.slots,), np.int32)
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.slot_pending[i]:
+                tokens[i] = self.slot_pending[i][0]
+            elif self.slot_out[i]:
+                tokens[i] = self.slot_out[i][-1]
+            else:
+                tokens[i] = req.prompt[-1]
+        self.state, logits = self._step(self.params, self.state,
+                                        jnp.asarray(tokens))
+        self.stats["steps"] += 1
+        logits = np.asarray(logits[:, : self.cfg.vocab])
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.slot_pending[i]:
+                self.slot_pending[i].pop(0)
+                if self.slot_pending[i]:
+                    continue  # still prefilling
+            # sample the next token from this step's logits
+            if req.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                nxt = int(jax.random.categorical(
+                    sub, jnp.asarray(logits[i]) / req.temperature))
+            else:
+                nxt = int(logits[i].argmax())
+            self.slot_out[i].append(nxt)
+            if len(self.slot_out[i]) >= req.max_new:
+                self.results.append(Result(req.rid, self.slot_out[i]))
+                self.slot_req[i] = None

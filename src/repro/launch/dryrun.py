@@ -28,6 +28,7 @@ from functools import partial
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.api import get_backend
 from repro.configs import SHAPES, cell_supported, get, names
 from repro.configs.shapes import input_specs
 from repro.launch import mesh as mesh_lib
@@ -94,9 +95,9 @@ def _lower(cfg, shape, mesh, attn_impl, remat, microbatches, dpax, dp,
         in_sh = (_named(mesh, pspecs), _named(mesh, bspecs))
         return jax.jit(prefill_step, in_shardings=in_sh).lower(
             pshapes, input_specs(cfg, shape))
-    # decode
-    def serve_step(params, state, tokens):
-        return M.decode_step(cfg, params, state, tokens, unroll=unroll)
+    # decode — the same step the serving facade compiles (repro.api)
+    serve_step = get_backend("jax-dense").make_decode_step(cfg,
+                                                           unroll=unroll)
     pspecs = M.param_specs(cfg, mdict)
     pshapes = jax.eval_shape(partial(M.init_params, cfg),
                              jax.random.PRNGKey(0))

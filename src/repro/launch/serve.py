@@ -1,4 +1,5 @@
-"""Serving launcher: batched decode, optionally AIDA-compressed weights.
+"""Serving launcher: batched decode through the `repro.api.Engine` facade,
+optionally AIDA-compressed weights.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --compress aida --density 0.1 --requests 16
@@ -10,12 +11,8 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-
+from repro.api import CompressionSpec, Engine, Request
 from repro.configs import get, reduced
-from repro.models import model as M
-from repro.serve.compress import compress_params
-from repro.serve.engine import Request, ServeEngine
 
 
 def main():
@@ -34,19 +31,18 @@ def main():
     if not cfg.has_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no serving")
     print(f"[serve] {cfg.name}: ~{cfg.params_count()/1e6:.1f}M params")
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg)
     if args.compress:
-        params, stats = compress_params(params, mode=args.compress,
-                                        density=args.density)
-        print(f"[serve] {args.compress}: {stats['n_compressed']} "
-              f"projections, {stats['ratio']:.1f}x weight memory")
+        eng.compress(CompressionSpec(mode=args.compress,
+                                     density=args.density))
+        print(f"[serve] {args.compress}: {eng.stats['n_compressed']} "
+              f"projections, {eng.stats['ratio']:.1f}x weight memory "
+              f"(backend: {eng.backend.name})")
 
-    eng = ServeEngine(cfg, params, batch_slots=args.slots, max_len=128)
-    for rid in range(args.requests):
-        eng.submit(Request(prompt=[1, 2 + rid % 7, 3], rid=rid,
-                           max_new=args.max_new))
+    reqs = [Request(prompt=[1, 2 + rid % 7, 3], rid=rid,
+                    max_new=args.max_new) for rid in range(args.requests)]
     t0 = time.perf_counter()
-    results = eng.run()
+    results = eng.serve(reqs, batch_slots=args.slots, max_len=128)
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.tokens) for r in results)
     print(f"[serve] {len(results)} requests, {n_tok} tokens, "

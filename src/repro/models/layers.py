@@ -12,6 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api import dispatch as _dispatch
+
 COMPUTE_DTYPE = jnp.bfloat16
 
 
@@ -30,13 +32,14 @@ def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
 
 
 def dense(x, w, bias=None):
-    """x @ w (+bias).  ``w`` may be a raw [d_in, d_out] matrix OR a
-    core.sparse_fc.CompressedFC (AIDA serving mode) — compression is
+    """x @ w (+bias).  ``w`` may be a raw [d_in, d_out] matrix OR any
+    compressed leaf registered with repro.api.dispatch (e.g. a
+    core.sparse_fc.CompressedFC, the AIDA serving mode) — compression is
     transparent to every projection in the model zoo."""
-    if type(w).__name__ == "CompressedFC":  # avoid circular import
-        from repro.core.sparse_fc import apply_fc
+    apply = _dispatch.applier_for(w)
+    if apply is not None:
         lead = x.shape[:-1]
-        y = apply_fc(w, x.reshape(-1, x.shape[-1]).astype(jnp.float32))
+        y = apply(w, x.reshape(-1, x.shape[-1]).astype(jnp.float32))
         y = y.reshape(*lead, y.shape[-1])
     else:
         y = jnp.matmul(x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE),

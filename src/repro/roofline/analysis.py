@@ -172,6 +172,8 @@ class Roofline:
 def from_compiled(arch: str, shape_name: str, mesh_name: str, chips: int,
                   cost: Dict, hlo_text: str, mflops: float,
                   mem=None) -> Roofline:
+    if isinstance(cost, (list, tuple)):  # jax >= 0.4.35 wraps it in a list
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     coll = parse_collective_bytes(hlo_text)

@@ -1,124 +1,21 @@
-"""Batched serving engine with continuous batching.
+"""DEPRECATED — the serving engine moved to `repro.api` (PR 1).
 
-Fixed-slot decode batch: requests occupy slots, finished slots are refilled
-from the queue without stopping the batch (continuous batching).  Prefill
-is chunk-free (token-by-token through the decode path) to keep one compiled
-step; prompts for a slot are fed before its generation starts.  Greedy or
-temperature sampling.
+Use `repro.api.Engine` (facade) or `repro.api.Session` (continuous-batching
+session) instead.  This shim keeps old imports working for one PR.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ArchConfig
-from repro.models import model as M
+from repro.api.session import Request, Result, Session  # noqa: F401
 
 
-@dataclasses.dataclass
-class Request:
-    prompt: List[int]
-    max_new: int = 16
-    temperature: float = 0.0
-    rid: int = 0
+class ServeEngine(Session):
+    """Deprecated alias of `repro.api.Session`."""
 
-
-@dataclasses.dataclass
-class Result:
-    rid: int
-    tokens: List[int]
-
-
-class ServeEngine:
-    def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
-                 max_len: int = 256, seed: int = 0):
-        assert cfg.has_decode, "encoder archs don't serve autoregressively"
-        self.cfg, self.params = cfg, params
-        self.slots = batch_slots
-        self.max_len = max_len
-        self.state = M.init_decode_state(cfg, batch_slots, max_len)
-        self.key = jax.random.PRNGKey(seed)
-        self._step = jax.jit(
-            lambda p, s, t: M.decode_step(cfg, p, s, t))
-        # per-slot bookkeeping (host side)
-        self.slot_req: List[Optional[Request]] = [None] * batch_slots
-        self.slot_pending: List[List[int]] = [[] for _ in range(batch_slots)]
-        self.slot_out: List[List[int]] = [[] for _ in range(batch_slots)]
-        self.queue: List[Request] = []
-        self.results: List[Result] = []
-
-    # ------------------------------------------------------------ public
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def run(self, max_steps: int = 10_000) -> List[Result]:
-        for _ in range(max_steps):
-            self._fill_slots()
-            if all(r is None for r in self.slot_req):
-                break
-            self._advance()
-        return self.results
-
-    # ----------------------------------------------------------- internals
-    def _fill_slots(self):
-        for i in range(self.slots):
-            if self.slot_req[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slot_req[i] = req
-                self.slot_pending[i] = list(req.prompt)
-                self.slot_out[i] = []
-                self._reset_slot_state(i)
-
-    def _reset_slot_state(self, i: int):
-        def zero_slot(x):
-            if x.ndim >= 2 and x.shape[1] == self.slots:  # [L, B, ...]
-                return x.at[:, i].set(jnp.zeros_like(x[:, i]))
-            return x
-        layers = jax.tree.map(zero_slot, self.state["layers"])
-        pos = self.state["pos"].at[i].set(0)
-        # empty cache slots must read as "never written": pos fields are -1
-        if self.cfg.family not in ("rwkv6",):
-            layers = dict(layers)
-            kv = layers["kv"]
-            layers["kv"] = kv._replace(
-                pos=kv.pos.at[:, i].set(-jnp.ones_like(kv.pos[:, i])))
-        self.state = {"layers": layers, "pos": pos}
-
-    def _advance(self):
-        tokens = np.zeros((self.slots,), np.int32)
-        active = np.zeros((self.slots,), bool)
-        for i, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            active[i] = True
-            if self.slot_pending[i]:
-                tokens[i] = self.slot_pending[i][0]
-            elif self.slot_out[i]:
-                tokens[i] = self.slot_out[i][-1]
-            else:
-                tokens[i] = req.prompt[-1]
-        self.state, logits = self._step(self.params, self.state,
-                                        jnp.asarray(tokens))
-        logits = np.asarray(logits[:, : self.cfg.vocab])
-        for i, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            if self.slot_pending[i]:
-                self.slot_pending[i].pop(0)
-                if self.slot_pending[i]:
-                    continue  # still prefilling
-            # sample the next token from this step's logits
-            if req.temperature > 0:
-                self.key, sub = jax.random.split(self.key)
-                nxt = int(jax.random.categorical(
-                    sub, jnp.asarray(logits[i]) / req.temperature))
-            else:
-                nxt = int(logits[i].argmax())
-            self.slot_out[i].append(nxt)
-            if len(self.slot_out[i]) >= req.max_new:
-                self.results.append(Result(req.rid, self.slot_out[i]))
-                self.slot_req[i] = None
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "repro.serve.engine.ServeEngine is deprecated; use "
+            "repro.api.Engine (facade) or repro.api.Session",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)

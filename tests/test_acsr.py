@@ -1,9 +1,11 @@
 """ACSR format: round-trip, flags, self-description (hypothesis-based)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import acsr
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import acsr  # noqa: E402
 
 
 def random_sparse(rng, n, k, density):

@@ -4,7 +4,9 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import aida_sim as S
 from repro.core.aida_fc import (aida_fc_layer, aida_fc_layer_coded,

@@ -1,0 +1,205 @@
+"""Unified `repro.api` facade: backend registry, capability routing, the
+five FC modes through one interface, and the emulator/cycle-sim cycle-count
+agreement (the invariant test_aida_fc.py asserts at module level, here
+driven purely through the facade — no hypothesis dependency)."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CapabilityError, CompressionSpec, Engine, FCProblem,
+                       MODES, backend_names, get_backend)
+from repro.configs import get, reduced
+from repro.core import sparse_fc as sfc
+
+CFG = reduced(get("llama3-8b"), n_layers=2, d_model=64, d_ff=128, vocab=256)
+
+
+# ------------------------------------------------------------- registry
+def test_registry_names_and_caps():
+    names = backend_names()
+    for required in ("jax-dense", "pallas", "ap-emulator", "cycle-sim"):
+        assert required in names
+    assert get_backend("pallas").caps.batched_decode
+    assert get_backend("pallas").caps.per_layer_override
+    assert set(get_backend("pallas").caps.modes) == set(MODES)
+    assert get_backend("ap-emulator").caps.cycle_accounting
+    assert get_backend("cycle-sim").caps.cycle_accounting
+    assert not get_backend("cycle-sim").caps.batched_decode
+
+
+def test_registry_unknown_backend():
+    with pytest.raises(KeyError, match="unknown backend"):
+        get_backend("tpu-v9")
+
+
+def test_capability_errors():
+    with pytest.raises(CapabilityError):
+        get_backend("cycle-sim").make_decode_step(CFG)
+    with pytest.raises(CapabilityError):
+        Engine().estimate(backend="jax-dense", workload="alexnet-fc")
+    with pytest.raises(CapabilityError):
+        # ap-emulator only takes concrete FCProblem workloads
+        Engine().estimate(backend="ap-emulator", workload="alexnet-fc")
+    with pytest.raises(CapabilityError, match="cannot execute modes"):
+        # a pinned dense backend must refuse compressed modes, not
+        # silently serve them through the Pallas kernels
+        Engine(CFG, backend="jax-dense").compress("aida")
+    with pytest.raises(CapabilityError, match="FCProblem"):
+        # the EIE model has no bit-level FCProblem pricing
+        Engine().estimate(backend="cycle-sim", simulator="eie",
+                          workload=FCProblem(w=np.eye(4, dtype=np.int64),
+                                             b=np.ones(4, np.int64)))
+
+
+# ----------------------------------------------------------------- spec
+def test_compression_spec_coerce_and_overrides():
+    assert CompressionSpec.coerce(None).mode == "aida"
+    assert CompressionSpec.coerce("int8").mode == "int8"
+    spec = CompressionSpec(mode="aida", overrides={"wo": "int8",
+                                                   "up": "skip"})
+    assert spec.mode_for("layers/attn/wo") == "int8"
+    assert spec.mode_for("layers/mlp/up") == "skip"
+    assert spec.mode_for("layers/attn/wq") == "aida"
+    with pytest.raises(ValueError, match="unknown mode"):
+        CompressionSpec(mode="fp4")
+    with pytest.raises(ValueError, match="unknown mode"):
+        CompressionSpec(overrides={"wo": "fp4"})
+
+
+# ------------------------------------------- five modes, one interface
+def test_pallas_backend_runs_all_five_modes(rng):
+    """Every FC operating point runs through the same Executor surface and
+    approximates the dense product."""
+    w = rng.normal(size=(32, 64)).astype(np.float32)
+    x = rng.normal(size=(4, 64)).astype(np.float32)
+    ref = x @ w.T
+    pallas = get_backend("pallas")
+    for mode in MODES:
+        layer = sfc.compress(w, mode=mode, density=0.5, k=16)
+        y = np.asarray(pallas.run_fc(layer, x))
+        assert y.shape == ref.shape, mode
+        assert np.isfinite(y).all(), mode
+        # the dense-equivalent weights are what the kernel must compute
+        weq = sfc.dense_equivalent(layer)
+        np.testing.assert_allclose(y, x @ weq.T, rtol=2e-2, atol=2e-2,
+                                   err_msg=mode)
+
+
+def test_jax_dense_backend_rejects_compressed(rng):
+    w = rng.normal(size=(16, 32)).astype(np.float32)
+    layer = sfc.compress(w, mode="int8")
+    with pytest.raises(CapabilityError, match="pallas"):
+        get_backend("jax-dense").run_fc(layer, np.zeros((2, 32), np.float32))
+
+
+def test_engine_compress_per_layer_override():
+    eng = Engine(CFG)
+    eng.compress(CompressionSpec(mode="aida", density=0.3,
+                                 overrides={"wo": "int8", "down": "skip"}))
+    layers = eng.params["layers"]
+    assert layers["attn"]["wo"].mode == "int8"
+    assert layers["attn"]["wq"].mode == "aida"
+    assert isinstance(layers["mlp"]["down"], jax.Array)  # skipped -> raw
+    assert eng.stats["modes"]["int8"] == CFG.n_layers
+    assert eng.backend.name == "pallas"
+
+
+def test_backend_routing_follows_override_modes():
+    # dense base mode + a compressed override still routes to pallas
+    eng = Engine(CFG).compress(CompressionSpec(
+        mode="dense", density=0.3, overrides={"wo": "int8"}))
+    assert eng.backend.name == "pallas"
+    # skip-only overrides execute nothing extra: pinned dense backend is OK
+    eng2 = Engine(CFG, backend="jax-dense").compress(CompressionSpec(
+        mode="dense", overrides={"down": "skip"}))
+    assert eng2.backend.name == "jax-dense"
+    assert isinstance(eng2.params["layers"]["mlp"]["down"], jax.Array)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_engine_serves_every_mode(mode):
+    """Engine(cfg).compress(spec).serve(requests) works at all five
+    operating points — the facade's core contract."""
+    from repro.api import Request
+    eng = Engine(CFG)
+    if mode != "dense":
+        eng.compress(CompressionSpec(mode=mode, density=0.3))
+        assert eng.stats["n_compressed"] > 0
+    res = eng.serve([Request(prompt=[1, 2, 3], max_new=3, rid=0)],
+                    batch_slots=1, max_len=16)
+    assert len(res) == 1 and len(res[0].tokens) == 3
+    assert all(0 <= t < CFG.vocab for t in res[0].tokens)
+
+
+# ------------------------------------- emulator == cycle-sim agreement
+def test_estimate_agreement_bitserial():
+    """`ap-emulator` (measured) and `cycle-sim` (closed form, EMULATOR
+    microcode) agree on FC cycle counts bit-for-bit, via the facade."""
+    eng = Engine()
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        n, k = rng.integers(3, 14), rng.integers(3, 14)
+        w = rng.integers(-15, 16, size=(n, k)) * (rng.random((n, k)) < 0.5)
+        b = rng.integers(-15, 16, size=(k,)) * (rng.random(k) < 0.7)
+        prob = FCProblem(w=w, b=b, m=4, n=4)
+        emu = eng.estimate(backend="ap-emulator", workload=prob)
+        sim = eng.estimate(backend="cycle-sim", workload=prob)
+        assert emu["exact"], "emulator must match the integer oracle"
+        assert emu["cycles"] == sim["cycles"]
+        assert emu["nnz_b"] == sim["nnz_b"] == prob.nnz_b
+        assert emu["max_row_nnz"] == sim["max_row_nnz"]
+
+
+def test_estimate_agreement_coded():
+    eng = Engine()
+    rng = np.random.default_rng(8)
+    cents_w = np.concatenate([[0], rng.integers(-99, 100, 15)])
+    cents_a = np.concatenate([[0], rng.integers(-99, 100, 15)])
+    for _ in range(2):
+        n, k = rng.integers(4, 12), rng.integers(4, 12)
+        wc = rng.integers(0, 16, size=(n, k)) * (rng.random((n, k)) < 0.4)
+        bc = rng.integers(0, 16, size=(k,)) * (rng.random(k) < 0.6)
+        prob = FCProblem(w=wc, b=bc, m=4, n=4, coded=True,
+                         cents_w=cents_w, cents_a=cents_a)
+        pmax = int(np.abs(np.outer(cents_w, cents_a)).max())
+        assert prob.prod_bits == max(1, math.ceil(math.log2(pmax + 1)))
+        emu = eng.estimate(backend="ap-emulator", workload=prob)
+        sim = eng.estimate(backend="cycle-sim", workload=prob)
+        assert emu["exact"]
+        assert emu["cycles"] == sim["cycles"]
+
+
+def test_estimate_named_workloads():
+    eng = Engine()
+    aida = eng.estimate(backend="cycle-sim", workload="alexnet-fc")
+    eie = eng.estimate(backend="cycle-sim", workload="alexnet-fc",
+                       simulator="eie")
+    assert aida["cycles"] > 0 and eie["cycles"] > 0
+    t1 = eng.estimate(backend="cycle-sim", workload="table1")
+    assert t1["aida"]["pp_gops"] / t1["eie"]["pp_gops"] > 10  # paper: 14.5x
+
+
+# ------------------------------------------------------- deprecation shims
+def test_serve_engine_shim_warns():
+    import jax as _jax
+    from repro.models import model as M
+    from repro.serve.engine import Request, ServeEngine
+    params = M.init_params(CFG, _jax.random.PRNGKey(0))
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        eng = ServeEngine(CFG, params, batch_slots=1, max_len=16)
+    eng.submit(Request(prompt=[1, 2], max_new=2, rid=0))
+    res = eng.run()
+    assert len(res) == 1 and len(res[0].tokens) == 2
+
+
+def test_compress_params_shim_warns():
+    import jax as _jax
+    from repro.models import model as M
+    from repro.serve.compress import compress_params
+    params = M.init_params(CFG, _jax.random.PRNGKey(0))
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        cparams, stats = compress_params(params, mode="int8", verbose=None)
+    assert stats["n_compressed"] > 0
+    assert type(cparams["layers"]["attn"]["wq"]).__name__ == "CompressedFC"

@@ -1,0 +1,98 @@
+"""Continuous-batching serving semantics, driven through repro.api.Engine:
+slot refill after a request finishes mid-batch, the prefill-then-generate
+boundary, and the greedy-vs-temperature sampling paths."""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Engine, Request
+from repro.configs import get, reduced
+from repro.models import model as M
+
+CFG = reduced(get("llama3-8b"), n_layers=2, d_model=64, d_ff=128, vocab=256)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_slot_refill_mid_batch(params):
+    """5 requests over 2 slots: finished slots refill without stopping the
+    batch; every request completes; results come back in rid order."""
+    eng = Engine(CFG, params=params)
+    sess = eng.session(batch_slots=2, max_len=32)
+    lens = [3, 6, 3, 6, 3]
+    for rid, mn in enumerate(lens):
+        sess.submit(Request(prompt=[1, 2 + rid], max_new=mn, rid=rid))
+    res = sess.run()
+    assert [r.rid for r in res] == [0, 1, 2, 3, 4]
+    assert [len(r.tokens) for r in res] == lens
+    assert sess.stats["fills"] == 5
+    # batching overlap: far fewer batch steps than serial execution
+    serial_steps = sum(2 + mn for mn in lens)
+    assert sess.stats["steps"] < serial_steps
+
+
+def test_prefill_then_generate_boundary(params):
+    """The first generated token must be sampled from the logits of the
+    LAST prompt token — verified against a manual decode loop."""
+    prompt, max_new = [1, 2, 3, 4], 3
+    eng = Engine(CFG, params=params)
+    got = eng.serve([Request(prompt=prompt, max_new=max_new, rid=0)],
+                    batch_slots=1, max_len=16)[0].tokens
+
+    state = M.init_decode_state(CFG, 1, 16)
+    toks = []
+    nxt = None
+    feed = list(prompt)
+    for _ in range(len(prompt) + max_new - 1):
+        tok = feed.pop(0) if feed else nxt
+        state, logits = M.decode_step(CFG, params, state,
+                                      jax.numpy.asarray([tok]))
+        nxt = int(np.asarray(logits[0, :CFG.vocab]).argmax())
+        if not feed:
+            toks.append(nxt)
+    assert got == toks
+
+
+def test_greedy_is_deterministic(params):
+    eng = Engine(CFG, params=params)
+    reqs = lambda: [Request(prompt=[1, 2, 3], max_new=6, rid=0)]  # noqa: E731
+    a = eng.serve(reqs(), batch_slots=1, max_len=16)[0].tokens
+    b = eng.serve(reqs(), batch_slots=1, max_len=16)[0].tokens
+    assert a == b
+
+
+def test_temperature_sampling_paths(params):
+    """Same seed -> reproducible samples; hot sampling diverges from the
+    greedy path (near-uniform random-init logits over 256 tokens)."""
+    eng = Engine(CFG, params=params)
+
+    def serve(temp, seed):
+        return eng.serve(
+            [Request(prompt=[1, 2, 3], max_new=8, temperature=temp, rid=0)],
+            batch_slots=1, max_len=16, seed=seed)[0].tokens
+
+    greedy = serve(0.0, 0)
+    hot1 = serve(5.0, 0)
+    hot2 = serve(5.0, 0)
+    hot3 = serve(5.0, 1)
+    assert hot1 == hot2           # seeded sampling is reproducible
+    assert hot1 != greedy         # sampling path actually samples
+    assert hot3 != hot1           # different seed, different draw
+    assert all(0 <= t < CFG.vocab for t in hot1)
+
+
+def test_mixed_greedy_and_sampled_batch(params):
+    """Greedy and temperature requests coexist in one continuous batch;
+    the greedy slot is unaffected by its sampled neighbour."""
+    eng = Engine(CFG, params=params)
+    solo = eng.serve([Request(prompt=[1, 2], max_new=4, rid=0)],
+                     batch_slots=2, max_len=16)[0].tokens
+    mixed = eng.serve(
+        [Request(prompt=[1, 2], max_new=4, rid=0),
+         Request(prompt=[5, 6], max_new=4, temperature=2.0, rid=1)],
+        batch_slots=2, max_len=16)
+    assert mixed[0].tokens == solo
+    assert len(mixed[1].tokens) == 4

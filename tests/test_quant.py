@@ -2,11 +2,13 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import codebook as cb
-from repro.core import quant as q
-from repro.core import sparse_fc as sfc
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import codebook as cb  # noqa: E402
+from repro.core import quant as q  # noqa: E402
+from repro.core import sparse_fc as sfc  # noqa: E402
 
 
 @settings(max_examples=25, deadline=None)
