@@ -1,0 +1,82 @@
+"""Perf regression gate: compare a fresh BENCH_api.json against the
+committed baseline and fail if any compressed mode lost >tol throughput.
+
+  python benchmarks/check_regression.py NEW.json BASELINE.json [--tol 0.2]
+
+A mode passes if EITHER its absolute tok/s OR its dense-normalized
+throughput (mode tok/s / same-run dense tok/s) is within tol of the
+baseline.  Rationale: the two views fail together only for genuine
+kernel regressions — a faster host inflates absolute numbers (normalized
+may dip because XLA dense scales with cores while interpret-mode kernels
+are overhead-bound), a slower host deflates absolute numbers roughly
+uniformly (normalized holds), but a change that actually slows a kernel
+loses on the same machine in both units.  Also re-asserts the cost-model
+invariants recorded in the file (emulator exactness + emulator/cycle-sim
+agreement).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_MODES = ("int8", "codebook4", "acsr", "aida")
+
+
+def _rel(run: dict, mode: str):
+    modes = run.get("modes", {})
+    dense = modes.get("dense", {}).get("tok_per_s")
+    tok = modes.get(mode, {}).get("tok_per_s")
+    if not dense or tok is None:
+        return None
+    return tok / dense
+
+
+def check(new: dict, base: dict, tol: float, log=print) -> bool:
+    ok = True
+    for mode in GATED_MODES:
+        b = base.get("modes", {}).get(mode)
+        n = new.get("modes", {}).get(mode)
+        if b is None or n is None:
+            log(f"  {mode:10s} missing from "
+                f"{'baseline' if b is None else 'new run'} — skipped")
+            continue
+        abs_ok = n["tok_per_s"] >= b["tok_per_s"] * (1.0 - tol)
+        rb, rn = _rel(base, mode), _rel(new, mode)
+        rel_ok = rb is not None and rn is not None and rn >= rb * (1.0 - tol)
+        status = "OK" if (abs_ok or rel_ok) else "REGRESSION"
+        if status != "OK":
+            ok = False
+        log(f"  {mode:10s} {b['tok_per_s']:8.1f} -> {n['tok_per_s']:8.1f} "
+            f"tok/s [{'ok' if abs_ok else 'lo'}]  "
+            f"{rb or 0:6.3f} -> {rn or 0:6.3f} x dense "
+            f"[{'ok' if rel_ok else 'lo'}]  {status}")
+    inv = new.get("backends", {})
+    if not inv.get("ap-emulator", {}).get("exact", False):
+        log("  ap-emulator exactness LOST")
+        ok = False
+    if not inv.get("cycle-sim", {}).get("agrees_with_emulator", False):
+        log("  emulator/cycle-sim agreement LOST")
+        ok = False
+    return ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new")
+    ap.add_argument("baseline")
+    ap.add_argument("--tol", type=float, default=0.2,
+                    help="allowed fractional tok/s loss (default 0.2)")
+    args = ap.parse_args()
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    print(f"perf gate (tol {args.tol:.0%}) — {args.new} vs {args.baseline}")
+    ok = check(new, base, args.tol)
+    print("PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,22 @@
 """Benchmark runner — one section per paper table/figure + kernel accounting,
 plus the unified-API backend benchmark (machine-readable BENCH_api.json).
 
-  PYTHONPATH=src python -m benchmarks.run [--api-only]
+  PYTHONPATH=src python -m benchmarks.run [--api-only] [--out PATH]
 """
 from __future__ import annotations
 
 import json
 import sys
 import time
+
+
+def _out_path(default: str = "BENCH_api.json") -> str:
+    if "--out" in sys.argv:
+        i = sys.argv.index("--out") + 1
+        if i >= len(sys.argv) or sys.argv[i].startswith("--"):
+            sys.exit("usage: benchmarks.run [--api-only] [--out PATH]")
+        return sys.argv[i]
+    return default
 
 
 def bench_api(out_path: str = "BENCH_api.json") -> dict:
@@ -20,9 +29,11 @@ def bench_api(out_path: str = "BENCH_api.json") -> dict:
     cfg = reduced(get("llama3-8b"), n_layers=2, d_model=128, d_ff=256,
                   vocab=512)
     eng = Engine(cfg)
+    # 8 requests x 16 tokens per mode: ~0.5s+ measured per mode, enough to
+    # keep host scheduling noise inside the CI gate's 20% tolerance
     data = eng.benchmark(modes=("dense", "int8", "codebook4", "acsr",
                                 "aida"),
-                         requests=4, max_new=8, batch_slots=2)
+                         requests=8, max_new=16, batch_slots=2)
     data["meta"] = {"arch": cfg.name, "host": "cpu-interpret",
                     "note": "tok/s on host CPU interpret-mode kernels — "
                             "trajectory signal, not TPU perf"}
@@ -50,7 +61,7 @@ def main() -> int:
         print("=" * 72)
         print("API — unified facade backend benchmark (repro.api.Engine)")
         print("=" * 72)
-        bench_api()
+        bench_api(out_path=_out_path())
         print(f"\n[benchmarks] done in {time.time()-t0:.0f}s")
         return 0
     from benchmarks import fig5, kernels_bench, table1
@@ -112,7 +123,7 @@ def main() -> int:
     print("=" * 72)
     print("API — unified facade backend benchmark (repro.api.Engine)")
     print("=" * 72)
-    bench_api()
+    bench_api(out_path=_out_path())
 
     print(f"\n[benchmarks] done in {time.time()-t0:.0f}s")
     return 0 if ok else 1

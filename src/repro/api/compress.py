@@ -7,12 +7,13 @@ works); `models.layers.dense` dispatches on the leaf type via
 `repro.api.dispatch`, so EVERY architecture's projections can serve
 compressed — the paper's "FC layers of DNN" surface, generalized to the zoo.
 
-This is the facade-owned implementation; `repro.serve.compress` is a
-deprecated shim over it.
+This is the facade-owned implementation (the old `repro.serve.compress`
+shim was removed in PR 2).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Tuple
 
 import jax
@@ -34,20 +35,26 @@ def _stack_compressed(per_layer: List[sfc.CompressedFC]) -> sfc.CompressedFC:
     """Stack per-layer CompressedFC into one scan-compatible pytree."""
     mode = per_layer[0].mode
     if mode in ("acsr", "aida"):
-        me = max(c.blocked.me for c in per_layer)
-        padded = []
-        for c in per_layer:
-            b = c.blocked
-            pad = me - b.me
-            padded.append(sp.BlockedACSR(
-                values=jnp.pad(b.values, ((0, 0), (0, pad))),
-                col_idx=jnp.pad(b.col_idx, ((0, 0), (0, pad))),
-                seg_local=jnp.pad(b.seg_local, ((0, 0), (0, pad)),
-                                  constant_values=b.block_rows),
-                shape=b.shape, block_rows=b.block_rows, nnz=b.nnz,
-                centroids=b.centroids))
-        blocked = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
-        blocked = dataclasses.replace(blocked, nnz=-1)
+        # uniform slot depth across layers (pad the rmax axis; padding
+        # slots are masked by row_nnz, so values/cols just zero-pad);
+        # per-layer nnz may differ, so the stacked aux records nnz=-1
+        rmax = max(c.blocked.rmax for c in per_layer)
+        bs = [c.blocked for c in per_layer]
+
+        def stk(arrs, pad_slots=True):
+            if pad_slots:
+                arrs = [jnp.pad(a, ((0, 0), (0, rmax - a.shape[1]),
+                                    (0, 0))) for a in arrs]
+            return jnp.stack(arrs)
+
+        b0 = bs[0]
+        blocked = sp.BlockedACSR(
+            values=stk([b.values for b in bs]),
+            col_idx=stk([b.col_idx for b in bs]),
+            row_nnz=stk([b.row_nnz for b in bs], pad_slots=False),
+            shape=b0.shape, block_rows=b0.block_rows, nnz=-1,
+            centroids=(None if b0.centroids is None
+                       else jnp.stack([b.centroids for b in bs])))
         return sfc.CompressedFC(mode=mode, shape=per_layer[0].shape,
                                 blocked=blocked)
     return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
@@ -85,9 +92,20 @@ def compress_params(params: Dict, spec: CompressionSpec = None, *,
         if leaf_mode == "skip":
             return leaf
         L = leaf.shape[0]
+        block_rows = spec.block_rows
+        if leaf_mode in ("acsr", "aida") \
+                and os.environ.get("REPRO_TUNE_BLOCK_ROWS") == "1":
+            # encode-time tile search: pick the row-block height by timing
+            # the fused kernel on this projection's pruned layer-0 weights
+            from repro.core import acsr as acsr_mod
+            from repro.kernels import ops, tune
+            w0 = acsr_mod.prune_topk(np.asarray(leaf[0]).T, spec.density)
+            block_rows = tune.choose_block_rows(
+                w0, leaf_mode, spec.density, default=spec.block_rows,
+                interpret=ops.pallas_interpret())
         per = [sfc.compress(np.asarray(leaf[i]).T, mode=leaf_mode,
                             density=spec.density, k=spec.k,
-                            block_rows=spec.block_rows,
+                            block_rows=block_rows,
                             kmeans_iters=spec.kmeans_iters)
                for i in range(L)]
         out = _stack_compressed(per)

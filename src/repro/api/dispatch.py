@@ -18,7 +18,10 @@ _APPLIERS: Dict[str, Callable] = {}
 
 
 def register_applier(type_name: str, fn: Callable) -> None:
-    """Register `fn(leaf, x2d) -> y2d` for param leaves of `type_name`."""
+    """Register `fn(leaf, x2d, bias=None, activation=None) -> y2d` for
+    param leaves of `type_name`.  ``bias``/``activation`` let the leaf's
+    kernel fuse the FC epilogue (appliers may ignore them only by applying
+    the same semantics some other way)."""
     _APPLIERS[type_name] = fn
 
 
@@ -27,9 +30,9 @@ def applier_for(leaf) -> Optional[Callable]:
     return _APPLIERS.get(type(leaf).__name__)
 
 
-def _apply_compressed_fc(leaf, x):
+def _apply_compressed_fc(leaf, x, bias=None, activation=None):
     from repro.core.sparse_fc import apply_fc
-    return apply_fc(leaf, x)
+    return apply_fc(leaf, x, bias=bias, activation=activation)
 
 
 register_applier("CompressedFC", _apply_compressed_fc)

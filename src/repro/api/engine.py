@@ -102,13 +102,23 @@ class Engine:
     # ------------------------------------------------------------- serve
     def session(self, batch_slots: int = 4, max_len: int = 256,
                 seed: int = 0) -> Session:
-        """A continuous-batching serving session on the active backend."""
+        """A continuous-batching serving session on the active backend.
+
+        On the Pallas backend, every unique compressed-FC geometry is
+        autotuned for this batch width *before* the decode step compiles,
+        so the jitted step traces against the winning tiles
+        (kernels.tune; disable with REPRO_AUTOTUNE=0)."""
         if self.cfg is None:
             raise ValueError("serving needs an ArchConfig")
         backend = self.backend
         if not backend.caps.batched_decode:
             raise CapabilityError(
                 f"backend {backend.name!r} cannot serve (no batched decode)")
+        if backend.name == "pallas" and self.compression is not None:
+            from repro.kernels import ops, tune
+            if tune.enabled():
+                tune.tune_params(self.params, batch_slots,
+                                 ops.pallas_interpret())
         return Session(self.cfg, self.params, batch_slots=batch_slots,
                        max_len=max_len, seed=seed, backend=backend)
 
@@ -152,9 +162,13 @@ class Engine:
         """Serve each mode through the facade and price the cost-model
         backends on one FC instance; returns a JSON-ready dict
         (benchmarks/run.py writes it to BENCH_api.json)."""
+        from repro.kernels import tune
         out = {"backends": {}, "modes": {}}
         reqs = [Request(prompt=[1, 2 + i % 7, 3], max_new=max_new, rid=i)
                 for i in range(requests)]
+        # entries already in the process-global cache were tuned by earlier
+        # sessions, not by this benchmark — attribute only new winners
+        seen_tiles = set(tune.snapshot())
         for mode in modes:
             eng = Engine(self.cfg, params=self.params)
             if mode != "dense":
@@ -170,10 +184,16 @@ class Engine:
             res = sess.run()
             dt = time.perf_counter() - t0
             n_tok = sum(len(r.tokens) for r in res)
+            # tiles the autotuner picked for this mode's layer shapes —
+            # recorded so the perf trajectory is reproducible
+            snap = tune.snapshot()
+            tiles = {k: v for k, v in snap.items() if k not in seen_tiles}
+            seen_tiles.update(snap)
             out["modes"][mode] = {
                 "backend": eng.backend.name,
                 "tokens": n_tok, "seconds": round(dt, 4),
                 "tok_per_s": round(n_tok / dt, 2),
+                "tiles": tiles,
                 "compression_ratio": (round(eng.stats["ratio"], 2)
                                       if eng.stats else 1.0)}
         if problem is None:

@@ -104,19 +104,28 @@ def compress(w: np.ndarray, mode: str = "aida", density: float = 0.10,
     raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
 
 
-def apply_fc(layer: CompressedFC, x: jnp.ndarray) -> jnp.ndarray:
-    """y = x @ W.T for x [B, n_in] (or [n_in]) under any mode."""
+def apply_fc(layer: CompressedFC, x: jnp.ndarray,
+             bias: Optional[jnp.ndarray] = None,
+             activation: Optional[str] = None) -> jnp.ndarray:
+    """y = act(x @ W.T + bias) for x [B, n_in] (or [n_in]) under any mode.
+
+    ``bias`` ([n_out]) and ``activation`` are fused into the kernel
+    epilogues on the Pallas paths (no extra HBM round-trip for y).
+    """
     squeeze = x.ndim == 1
     x2 = x[None, :] if squeeze else x
     if layer.mode == "dense":
         y = jnp.matmul(x2, layer.dense.T,
                        preferred_element_type=jnp.float32)
+        y = ops.bias_act_epilogue(y, bias, activation)
     elif layer.mode == "int8":
-        y = q.int8_matmul_ref(x2, layer.qt)
+        y = ops.int8_matmul(x2, layer.qt, bias=bias, activation=activation)
     elif layer.mode == "codebook4":
-        y = ops.lut_matmul(x2, layer.codes_packed, layer.centroids)
+        y = ops.lut_matmul(x2, layer.codes_packed, layer.centroids,
+                           bias=bias, activation=activation)
     elif layer.mode in ("acsr", "aida"):
-        y = ops.acsr_spmv(layer.blocked, x2.T).T
+        y = ops.acsr_spmv(layer.blocked, x2.T, bias=bias,
+                          activation=activation).T
     else:
         raise ValueError(layer.mode)
     return y[0] if squeeze else y
@@ -137,13 +146,15 @@ def dense_equivalent(layer: CompressedFC) -> np.ndarray:
         if b.centroids is not None:
             vals = np.asarray(b.centroids)[np.asarray(b.values, np.int64)]
         out = np.zeros(layer.shape, np.float32)
-        br = b.block_rows
-        for blk in range(b.nblocks):
-            segs = np.asarray(b.seg_local[blk])
-            cols = np.asarray(b.col_idx[blk])
-            keep = segs < br
-            rows = blk * br + segs[keep]
-            inb = rows < layer.shape[0]
-            out[rows[inb], cols[keep][inb]] = vals[blk][keep][inb]
+        br, rmax = b.block_rows, b.rmax
+        # vectorized inverse of the slot schedule: lane = row % block_rows,
+        # live slots are those below the row's precomputed population
+        live = (np.arange(rmax)[None, :, None]
+                < np.asarray(b.row_nnz)[:, None, :])     # [nb, rmax, br]
+        blk, slot, lane = np.nonzero(live)
+        rows = blk * br + lane
+        inb = rows < layer.shape[0]
+        cols = np.asarray(b.col_idx, np.int64)[blk, slot, lane]
+        out[rows[inb], cols[inb]] = vals[blk, slot, lane][inb]
         return out
     raise ValueError(layer.mode)

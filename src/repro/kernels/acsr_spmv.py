@@ -1,20 +1,40 @@
-"""Blocked-ACSR sparse matvec/matmul — the paper's algorithm, TPU-native.
+"""Blocked-ACSR sparse matvec/matmul — fused multi-block decode pipeline.
 
-The per-nnz stream (value, col_idx, seg_id) is regrouped into row blocks:
-``block_rows`` consecutive matrix rows contribute one padded entry stream of
-length ``me`` (max entries per row-block, padded with seg_local=block_rows).
-Each grid step then IS the paper's Fig. 3 pipeline for its block:
+The paper's per-nnz stream (value, col_idx, row flags) is re-scheduled at
+``block_encode`` time into a *row-balanced slot layout*, EIE's PE schedule
+mapped onto TPU lanes: each block owns ``block_rows`` consecutive matrix
+rows (one row per lane), and slot step ``s`` consumes the ``s``-th nonzero
+of every row in the block simultaneously —
 
-  activation broadcast → gather x[col_idx]   (VMEM gather; x stays resident)
-  multiplication       → values * gathered   (VPU, all lanes in parallel)
-  soft reduction       → one-hot(seg_local)ᵀ @ products on the MXU —
-                         a segmented sum computed as a [me, bn+1] matmul;
-                         the MXU's systolic reduction replaces the CAM's
-                         tag-shift binary tree (log-depth in both cases).
+    values:  [nblocks, rmax, block_rows]   (slot-major; lane = matrix row)
+    col_idx: [nblocks, rmax, block_rows]
+    row_nnz: [nblocks, block_rows]         per-row segment lengths
+
+``row_nnz`` IS the precomputed segment structure: under this schedule the
+segment one-hot of the paper's soft reduction becomes the *static* matrix
+kron(I_block_rows, 1_rmax), so the segmented sum is a plain slot-axis
+reduction and nothing is rebuilt per kernel invocation.  (The previous
+kernel materialized a fresh [me, block_rows] one-hot and pushed it through
+the MXU on every call — nnz x block_rows MACs per block, 30-80x the work
+of the dense matmul it replaced.)
+
+Each grid step of the fused kernel IS the paper's Fig. 3 pipeline for a
+*batch* of ``mb`` row blocks:
+
+  activation broadcast -> gather x_tile[col_idx]  (K-tiled: only a [bk, B]
+                          slice of x is VMEM-resident; out-of-tile entries
+                          are masked and accumulated on a later K step)
+  multiplication       -> values * gathered       (VPU, 128 rows in flight)
+  soft reduction       -> slot-axis sum           (static segment one-hot)
+  epilogue             -> + bias, activation      (fused on the last K step)
 
 Supports matvec (x: [K]) and multi-activation matmul (x: [K, B]), plus
-codebook-coded values (values are uint8 codes dequantized against a
-16-entry table in VMEM — combine with sparsity for the full AIDA mode).
+codebook-coded values (uint8 codes dequantized against a 16-entry VMEM
+table — combine with sparsity for the full AIDA mode).
+
+Load imbalance caveat: ``rmax`` is the max row population, so a single
+dense row pads every other row's slot stream (EIE has the same
+pathology).  Magnitude-pruned layers are near-balanced in practice.
 """
 from __future__ import annotations
 
@@ -28,24 +48,27 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import acsr as acsr_mod
+from repro.kernels.util import apply_activation as _act
+from repro.kernels.util import cdiv as _cdiv
 
 
 # --------------------------------------------------------------- format
 @dataclasses.dataclass
 class BlockedACSR:
-    """Row-blocked ACSR with static shapes (TPU layout of the paper's Fig. 2).
+    """Row-blocked ACSR in the balanced slot schedule (TPU layout of the
+    paper's Fig. 2, rescheduled for 128-lane execution).
 
-    values:    [nblocks, me] f32 (or uint8 codes if ``coded``)
-    col_idx:   [nblocks, me] int32
-    seg_local: [nblocks, me] int32 in [0, block_rows]; block_rows = padding
+    values:  [nblocks, rmax, block_rows] f32 (or uint8 codes if ``coded``)
+    col_idx: [nblocks, rmax, block_rows] int32 (int16 when n_cols allows)
+    row_nnz: [nblocks, block_rows] int32 — nonzeros per matrix row; the
+             encode-time segment structure (slot >= row_nnz is padding)
 
     Registered as a pytree (arrays = leaves, geometry = static) so
     compressed weights can live INSIDE jitted model params.
     """
     values: jnp.ndarray
     col_idx: jnp.ndarray
-    seg_local: jnp.ndarray
+    row_nnz: jnp.ndarray
     shape: Tuple[int, int]
     block_rows: int
     nnz: int
@@ -56,19 +79,20 @@ class BlockedACSR:
         return int(self.values.shape[0])
 
     @property
-    def me(self) -> int:
+    def rmax(self) -> int:
+        """Padded slot count (max nonzeros of any row)."""
         return int(self.values.shape[1])
 
 
 def _bacsr_flatten(b: "BlockedACSR"):
-    return ((b.values, b.col_idx, b.seg_local, b.centroids),
+    return ((b.values, b.col_idx, b.row_nnz, b.centroids),
             (b.shape, b.block_rows, b.nnz))
 
 
 def _bacsr_unflatten(aux, children):
-    values, col_idx, seg_local, centroids = children
+    values, col_idx, row_nnz, centroids = children
     shape, block_rows, nnz = aux
-    return BlockedACSR(values=values, col_idx=col_idx, seg_local=seg_local,
+    return BlockedACSR(values=values, col_idx=col_idx, row_nnz=row_nnz,
                        shape=shape, block_rows=block_rows, nnz=nnz,
                        centroids=centroids)
 
@@ -78,113 +102,178 @@ jax.tree_util.register_pytree_node(BlockedACSR, _bacsr_flatten,
 
 
 def block_encode(dense: np.ndarray, block_rows: int = 128,
-                 lane_pad: int = 128) -> BlockedACSR:
-    """Re-block a dense matrix's nonzeros by groups of ``block_rows`` rows."""
+                 slot_pad: int = 8) -> BlockedACSR:
+    """Pack a dense matrix's nonzeros into the balanced slot schedule.
+
+    Fully vectorized (bincount + cumsum over the whole matrix — no
+    per-block Python loops), so offline compression of real layer shapes
+    is linear in nnz.
+    """
     dense = np.asarray(dense)
+    assert dense.ndim == 2, "BlockedACSR encodes 2-D matrices"
     n_rows, n_cols = dense.shape
-    nblocks = (n_rows + block_rows - 1) // block_rows
-    per_block = []
-    me = lane_pad
-    for bidx in range(nblocks):
-        rows = slice(bidx * block_rows, min((bidx + 1) * block_rows, n_rows))
-        sub = dense[rows]
-        r, c = np.nonzero(sub)
-        order = np.lexsort((c, r))
-        per_block.append((sub[r, c][order], c[order], r[order]))
-        me = max(me, len(order))
-    me = ((me + lane_pad - 1) // lane_pad) * lane_pad
+    nblocks = max(1, _cdiv(n_rows, block_rows))
+    rows, cols = np.nonzero(dense)              # row-major by construction
+    nnz = len(rows)
+    counts = np.bincount(rows, minlength=nblocks * block_rows)
+    rmax = int(counts.max(initial=0))
+    rmax = max(slot_pad, _cdiv(rmax, slot_pad) * slot_pad)
+    # slot of each entry = its index within its row
+    starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    slot = np.arange(nnz) - starts[rows]
+    blk, lane = rows // block_rows, rows % block_rows
     # compact index types — the memory footprint IS the paper's argument
     col_t = np.int16 if n_cols < 2 ** 15 else np.int32
-    seg_t = np.uint8 if block_rows < 2 ** 8 else np.int32
-    vals = np.zeros((nblocks, me), np.float32)
-    cols = np.zeros((nblocks, me), col_t)
-    segs = np.full((nblocks, me), block_rows, seg_t)
-    nnz = 0
-    for bidx, (v, c, r) in enumerate(per_block):
-        k = len(v)
-        nnz += k
-        vals[bidx, :k] = v
-        cols[bidx, :k] = c
-        segs[bidx, :k] = r
-    return BlockedACSR(values=jnp.asarray(vals), col_idx=jnp.asarray(cols),
-                       seg_local=jnp.asarray(segs), shape=(n_rows, n_cols),
-                       block_rows=block_rows, nnz=int(nnz))
+    vals = np.zeros((nblocks, rmax, block_rows), np.float32)
+    cidx = np.zeros((nblocks, rmax, block_rows), col_t)
+    vals[blk, slot, lane] = dense[rows, cols]
+    cidx[blk, slot, lane] = cols
+    row_nnz = counts.reshape(nblocks, block_rows).astype(np.int32)
+    return BlockedACSR(values=jnp.asarray(vals), col_idx=jnp.asarray(cidx),
+                       row_nnz=jnp.asarray(row_nnz),
+                       shape=(n_rows, n_cols), block_rows=block_rows,
+                       nnz=int(nnz))
 
 
 def block_encode_coded(dense: np.ndarray, centroids: np.ndarray,
                        block_rows: int = 128,
-                       lane_pad: int = 128) -> BlockedACSR:
+                       slot_pad: int = 8) -> BlockedACSR:
     """Sparse + codebook: store the nonzeros' 4-bit codes, not values."""
-    b = block_encode(dense, block_rows, lane_pad)
+    b = block_encode(dense, block_rows, slot_pad)
     cents = np.asarray(centroids, np.float32)
     vals = np.asarray(b.values)
-    codes = np.abs(vals[..., None] - cents[None, None, :]).argmin(-1)
-    codes[vals == 0.0] = int(np.abs(cents).argmin())  # padding → zero-ish code
+    codes = np.abs(vals[..., None] - cents[None, None, None, :]).argmin(-1)
+    codes[vals == 0.0] = 0  # padding slots (masked by row_nnz in-kernel)
     return dataclasses.replace(
         b, values=jnp.asarray(codes.astype(np.uint8)),
         centroids=jnp.asarray(cents))
 
 
 # --------------------------------------------------------------- kernel
-def _spmv_kernel(vals_ref, cols_ref, segs_ref, x_ref, o_ref, *,
-                 block_rows: int, coded: bool, cents_ref=None):
-    vals = vals_ref[...]                                  # [1, me]
+def _fused_spmv_kernel(vals_ref, cols_ref, nnz_ref, x_ref, *opt_refs,
+                       block_rows: int, bk: int, n_k_blocks: int,
+                       coded: bool, has_bias: bool,
+                       activation: Optional[str]):
+    """One grid step = the Fig. 3 pipeline for ``mb`` row blocks over one
+    K tile.  opt_refs order: [cents], [bias], out, acc(scratch)."""
+    refs = list(opt_refs)
+    cents_ref = refs.pop(0) if coded else None
+    bias_ref = refs.pop(0) if has_bias else None
+    o_ref, acc_ref = refs
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    vals = vals_ref[...]                                # [mb, rmax, br]
     if coded:
         vals = jnp.take(cents_ref[0], vals.astype(jnp.int32), axis=0)
-    cols = cols_ref[...][0].astype(jnp.int32)             # [me]
-    segs = segs_ref[...][0].astype(jnp.int32)             # [me]
-    x = x_ref[...]                                        # [K, B]
-    gathered = jnp.take(x, cols, axis=0)                  # broadcast: [me, B]
-    prod = vals.reshape(-1, 1).astype(jnp.float32) * gathered.astype(jnp.float32)
-    # soft reduction on the MXU: segmented sum as one-hot matmul
-    onehot = (segs[:, None] ==
-              jax.lax.broadcasted_iota(jnp.int32, (1, block_rows), 1)
-              ).astype(jnp.float32)                       # [me, bn]
-    o_ref[...] = jax.lax.dot_general(
-        onehot, prod, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)[None]         # [1, bn, B]
+    mb, rmax, br = vals.shape
+    cols = cols_ref[...].astype(jnp.int32)              # [mb, rmax, br]
+    # precomputed segment structure: slot >= row_nnz is padding
+    slot = jax.lax.broadcasted_iota(jnp.int32, (mb, rmax, br), 1)
+    live = slot < nnz_ref[...][:, None, :]              # [mb, rmax, br]
+    # K-tiled activation broadcast: gather from the resident [bk, B] slice,
+    # masking entries whose column lives in another K tile
+    local = cols - kb * bk
+    in_tile = live & (local >= 0) & (local < bk)
+    x = x_ref[...]                                      # [bk, B]
+    gathered = jnp.take(x, jnp.clip(local, 0, bk - 1).reshape(-1),
+                        axis=0).reshape(mb, rmax, br, -1)
+    prod = jnp.where(in_tile, vals.astype(jnp.float32), 0.0)[..., None] \
+        * gathered.astype(jnp.float32)
+    # soft reduction: the segment one-hot is static under the slot
+    # schedule (kron(I_br, 1_rmax)) -> plain slot-axis sum
+    acc_ref[...] += prod.sum(axis=1)                    # [mb, br, B]
+
+    @pl.when(kb == n_k_blocks - 1)
+    def _done():
+        y = acc_ref[...]
+        if has_bias:
+            y = y + bias_ref[...][..., None]            # [mb, br, 1]
+        o_ref[...] = _act(activation, y)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def _spmv_call(values, col_idx, seg_local, x2d, centroids, *,
-               block_rows: int, interpret: bool):
-    nblocks, me = values.shape
+@functools.partial(jax.jit, static_argnames=(
+    "block_rows", "mb", "bk", "activation", "interpret"))
+def _spmv_call(values, col_idx, row_nnz, x2d, centroids, bias, *,
+               block_rows: int, mb: int, bk: int,
+               activation: Optional[str], interpret: bool):
+    nblocks, rmax, br = values.shape
     k, bsz = x2d.shape
     coded = centroids is not None
-    kern = functools.partial(_spmv_kernel, block_rows=block_rows,
-                             coded=coded)
+    has_bias = bias is not None
+    # pad the block axis to a multiple of mb (padding blocks: row_nnz = 0)
+    nsuper = _cdiv(nblocks, mb)
+    pad_b = nsuper * mb - nblocks
+    if pad_b:
+        values = jnp.pad(values, ((0, pad_b), (0, 0), (0, 0)))
+        col_idx = jnp.pad(col_idx, ((0, pad_b), (0, 0), (0, 0)))
+        row_nnz = jnp.pad(row_nnz, ((0, pad_b), (0, 0)))
+    # pad K to a multiple of bk (zero activations never contribute)
+    n_k = _cdiv(k, bk)
+    if n_k * bk != k:
+        x2d = jnp.pad(x2d, ((0, n_k * bk - k), (0, 0)))
+    grid = (nsuper, n_k)
     in_specs = [
-        pl.BlockSpec((1, me), lambda i: (i, 0)),
-        pl.BlockSpec((1, me), lambda i: (i, 0)),
-        pl.BlockSpec((1, me), lambda i: (i, 0)),
-        pl.BlockSpec((k, bsz), lambda i: (0, 0)),   # x resident in VMEM
+        pl.BlockSpec((mb, rmax, br), lambda i, kb: (i, 0, 0)),
+        pl.BlockSpec((mb, rmax, br), lambda i, kb: (i, 0, 0)),
+        pl.BlockSpec((mb, br), lambda i, kb: (i, 0)),
+        pl.BlockSpec((bk, bsz), lambda i, kb: (kb, 0)),
     ]
-    args = [values, col_idx, seg_local, x2d]
+    args = [values, col_idx, row_nnz, x2d]
     if coded:
         cents2d = centroids.reshape(1, -1)
-        def kern(vals_ref, cols_ref, segs_ref, x_ref, cents_ref, o_ref):
-            _spmv_kernel(vals_ref, cols_ref, segs_ref, x_ref, o_ref,
-                         block_rows=block_rows, coded=True,
-                         cents_ref=cents_ref)
-        in_specs.append(pl.BlockSpec((1, cents2d.shape[1]), lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec((1, cents2d.shape[1]),
+                                     lambda i, kb: (0, 0)))
         args.append(cents2d)
+    if has_bias:
+        bias2d = jnp.pad(bias.astype(jnp.float32),
+                         (0, (nblocks + pad_b) * br - bias.shape[0])
+                         ).reshape(-1, br)
+        in_specs.append(pl.BlockSpec((mb, br), lambda i, kb: (i, 0)))
+        args.append(bias2d)
+    kern = functools.partial(
+        _fused_spmv_kernel, block_rows=br, bk=bk, n_k_blocks=n_k,
+        coded=coded, has_bias=has_bias, activation=activation)
     return pl.pallas_call(
         kern,
-        grid=(nblocks,),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, block_rows, bsz), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((nblocks, block_rows, bsz),
-                                       jnp.float32),
+        out_specs=pl.BlockSpec((mb, br, bsz), lambda i, kb: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nsuper * mb, br, bsz), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((mb, br, bsz), jnp.float32)],
         interpret=interpret,
     )(*args)
 
 
-def acsr_spmv(b: BlockedACSR, x: jnp.ndarray,
+def default_tiles(nblocks: int, k: int) -> Tuple[int, int]:
+    """Heuristic (mb, bk) when no autotuned choice is cached: fuse up to 8
+    row blocks per grid step; keep x resident unless K is large."""
+    mb = min(8, max(1, nblocks))
+    bk = k if k <= 2048 else 512
+    return mb, bk
+
+
+def acsr_spmv(b: BlockedACSR, x: jnp.ndarray, *,
+              bias: Optional[jnp.ndarray] = None,
+              activation: Optional[str] = None,
+              mb: Optional[int] = None, bk: Optional[int] = None,
               interpret: bool = True) -> jnp.ndarray:
-    """Sparse (optionally coded) matmul: returns W @ x, [n_rows] / [n_rows,B]."""
+    """Sparse (optionally coded) fused pipeline: act(W @ x + bias).
+
+    x: [K] or [K, B]; bias: [n_rows] broadcast over B.  Returns
+    [n_rows] / [n_rows, B] f32.  ``mb``/``bk`` select the fused tile
+    shape (see kernels.tune for the autotuner that picks them).
+    """
     squeeze = x.ndim == 1
     x2d = x[:, None] if squeeze else x
-    out = _spmv_call(b.values, b.col_idx, b.seg_local, x2d, b.centroids,
-                     block_rows=b.block_rows, interpret=interpret)
-    out = out.reshape(b.nblocks * b.block_rows, -1)[: b.shape[0]]
+    d_mb, d_bk = default_tiles(b.nblocks, x2d.shape[0])
+    mb = d_mb if mb is None else min(mb, b.nblocks)
+    bk = d_bk if bk is None else min(bk, x2d.shape[0])
+    out = _spmv_call(b.values, b.col_idx, b.row_nnz, x2d, b.centroids,
+                     bias, block_rows=b.block_rows, mb=mb, bk=bk,
+                     activation=activation, interpret=interpret)
+    out = out.reshape(-1, out.shape[-1])[: b.shape[0]]
     return out[:, 0] if squeeze else out

@@ -19,11 +19,15 @@ Two modes:
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.util import apply_activation as _act
+from repro.kernels.util import cdiv as _cdiv
 
 
 def _unpack4(packed: jnp.ndarray) -> jnp.ndarray:
@@ -34,9 +38,13 @@ def _unpack4(packed: jnp.ndarray) -> jnp.ndarray:
 
 
 # ------------------------------------------------------- weights-coded
-def _lut_matmul_kernel(x_ref, codes_ref, cents_ref, o_ref, acc_ref, *,
-                       n_k_blocks: int):
+def _lut_matmul_kernel(x_ref, codes_ref, cents_ref, *opt_refs,
+                       n_k_blocks: int, has_bias: bool,
+                       activation: Optional[str]):
     """Grid (m, n, k): acc[bm,bn] += x[bm,bk] @ dequant(codes[bn,bk/2]).T."""
+    refs = list(opt_refs)
+    bias_ref = refs.pop(0) if has_bias else None
+    o_ref, acc_ref = refs
     kb = pl.program_id(2)
 
     @pl.when(kb == 0)
@@ -52,39 +60,66 @@ def _lut_matmul_kernel(x_ref, codes_ref, cents_ref, o_ref, acc_ref, *,
 
     @pl.when(kb == n_k_blocks - 1)
     def _done():
-        o_ref[...] = acc_ref[...]
+        y = acc_ref[...]
+        if has_bias:
+            y = y + bias_ref[...]
+        o_ref[...] = _act(activation, y)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
+                                             "activation", "interpret"))
 def lut_matmul(x: jnp.ndarray, codes_packed: jnp.ndarray,
-               centroids: jnp.ndarray, *, bm: int = 128, bn: int = 128,
+               centroids: jnp.ndarray, *,
+               bias: Optional[jnp.ndarray] = None,
+               activation: Optional[str] = None,
+               bm: int = 128, bn: int = 128,
                bk: int = 512, interpret: bool = True) -> jnp.ndarray:
-    """x [B,K] @ dequant(codes [N,K/2], centroids [16]).T -> [B,N] f32.
+    """act(x [B,K] @ dequant(codes [N,K/2], centroids).T + bias) -> [B,N].
 
     BlockSpecs: x tiles [bm,bk], code tiles [bn,bk/2] (uint8 — ½ byte/weight
     of VMEM), centroid table replicated (64 B).  MXU dims are 128-aligned.
     VMEM/instance ≈ bm·bk·4 + bn·bk/2 + 2·bm·bn·4 ≈ 0.5 MB at defaults.
+    Odd b/n/k are padded up to the tile grid and the output sliced back
+    (k padding adds zero activations, so padded code columns are inert).
     """
     b, k = x.shape
     n, k2 = codes_packed.shape
     assert k2 * 2 == k, "packed codes must cover K"
-    bm, bn, bk = min(bm, b), min(bn, n), min(bk, k)
-    assert b % bm == 0 and n % bn == 0 and k % bk == 0
-    grid = (b // bm, n // bn, k // bk)
+    bm, bn = min(bm, _cdiv(b, 8) * 8), min(bn, n)
+    bk = min(bk, k)
+    bk += bk % 2  # code tiles hold bk/2 packed bytes
+    bp, np_ = _cdiv(b, bm) * bm, _cdiv(n, bn) * bn
+    kp = _cdiv(k, bk) * bk
+    if (bp, kp) != (b, k):
+        x = jnp.pad(x, ((0, bp - b), (0, kp - k)))
+    if (np_, kp) != (n, k):
+        codes_packed = jnp.pad(codes_packed, ((0, np_ - n),
+                                              (0, (kp - k) // 2)))
+    grid = (bp // bm, np_ // bn, kp // bk)
     cents2d = centroids.reshape(1, -1).astype(jnp.float32)
-    return pl.pallas_call(
-        functools.partial(_lut_matmul_kernel, n_k_blocks=grid[2]),
+    has_bias = bias is not None
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
+        pl.BlockSpec((bn, bk // 2), lambda i, j, kb: (j, kb)),
+        pl.BlockSpec((1, cents2d.shape[1]), lambda i, j, kb: (0, 0)),
+    ]
+    args = [x, codes_packed, cents2d]
+    if has_bias:
+        bias2d = jnp.pad(bias.astype(jnp.float32).reshape(1, -1),
+                         ((0, 0), (0, np_ - n)))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kb: (0, j)))
+        args.append(bias2d)
+    out = pl.pallas_call(
+        functools.partial(_lut_matmul_kernel, n_k_blocks=grid[2],
+                          has_bias=has_bias, activation=activation),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
-            pl.BlockSpec((bn, bk // 2), lambda i, j, kb: (j, kb)),
-            pl.BlockSpec((1, cents2d.shape[1]), lambda i, j, kb: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, codes_packed, cents2d)
+    )(*args)
+    return out[:b, :n]
 
 
 # ---------------------------------------------------------- fully-coded
@@ -122,11 +157,18 @@ def lut_product_matmul(x_codes: jnp.ndarray, codes_packed: jnp.ndarray,
     n, k2 = codes_packed.shape
     assert k2 * 2 == k
     nc = lut.shape[0]
-    bm, bn, bk = min(bm, b), min(bn, n), min(bk, k)
-    assert b % bm == 0 and n % bn == 0 and k % bk == 0
-    grid = (b // bm, n // bn, k // bk)
+    bm, bn = min(bm, _cdiv(b, 8) * 8), min(bn, n)
+    bk = min(bk, k)
+    bk += bk % 2
+    bp, np_ = _cdiv(b, bm) * bm, _cdiv(n, bn) * bn
+    kp = _cdiv(k, bk) * bk
+    if (bp, kp) != (b, k) or (np_, kp) != (n, k):
+        x_codes = jnp.pad(x_codes, ((0, bp - b), (0, kp - k)))
+        codes_packed = jnp.pad(codes_packed, ((0, np_ - n),
+                                              (0, (kp - k) // 2)))
+    grid = (bp // bm, np_ // bn, kp // bk)
     lut_flat = lut.reshape(1, -1).astype(jnp.float32)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_lut_product_kernel, n_k_blocks=grid[2],
                           n_codes=nc),
         grid=grid,
@@ -136,7 +178,12 @@ def lut_product_matmul(x_codes: jnp.ndarray, codes_packed: jnp.ndarray,
             pl.BlockSpec((1, nc * nc), lambda i, j, kb: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x_codes, codes_packed, lut_flat)
+    out = out[:b, :n]
+    if kp != k:
+        # every padded column contributed lut[0, 0] once per column
+        out = out - (kp - k) * lut[0, 0]
+    return out

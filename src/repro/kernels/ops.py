@@ -17,9 +17,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels import flash_attention as _fa
+from repro.kernels import int8_matmul as _i8
 from repro.kernels import linear_scan as _ls
 from repro.kernels import lut_matmul as _lm
 from repro.kernels import acsr_spmv as _sp
+from repro.kernels import tune as _tune
 
 
 def pallas_interpret() -> bool:
@@ -107,9 +109,31 @@ def mamba_decode_step(h, x, dt, A, B, C):
 
 
 # --------------------------------------------------------------- quantized
-def lut_matmul(x, codes_packed, centroids, **kw):
-    kw.setdefault("interpret", pallas_interpret())
-    return _lm.lut_matmul(x, codes_packed, centroids, **kw)
+def bias_act_epilogue(y, bias=None, activation=None):
+    """The fused kernels' epilogue, replayed in XLA for the ref paths."""
+    from repro.kernels.util import apply_activation
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return apply_activation(activation, y)
+
+
+def lut_matmul(x, codes_packed, centroids, bias=None, activation=None, **kw):
+    """Codebook4 FC: dispatches to the Pallas LUT kernel or the XLA ref per
+    the autotuned winner for this (shape, batch, backend)."""
+    interp = kw.setdefault("interpret", pallas_interpret())
+    choice = _tune.get(_tune.lut_key(codes_packed.shape[0],
+                                     codes_packed.shape[1] * 2,
+                                     x.shape[0], interp))
+    if choice is not None and choice.impl == "xla":
+        return bias_act_epilogue(
+            _ref.lut_matmul_ref(x, codes_packed, centroids),
+            bias, activation)
+    if choice is not None:
+        for t in ("bm", "bn", "bk"):
+            if choice.tile(t):
+                kw.setdefault(t, choice.tile(t))
+    return _lm.lut_matmul(x, codes_packed, centroids, bias=bias,
+                          activation=activation, **kw)
 
 
 def lut_product_matmul(x_codes, codes_packed, lut, **kw):
@@ -117,6 +141,34 @@ def lut_product_matmul(x_codes, codes_packed, lut, **kw):
     return _lm.lut_product_matmul(x_codes, codes_packed, lut, **kw)
 
 
-def acsr_spmv(blocked, x, **kw):
-    kw.setdefault("interpret", pallas_interpret())
-    return _sp.acsr_spmv(blocked, x, **kw)
+def int8_matmul(x, qt, bias=None, activation=None, **kw):
+    """Int8 FC: Pallas kernel with the per-channel dequant folded into the
+    epilogue, or the XLA reference when the tuner measured it faster."""
+    interp = kw.setdefault("interpret", pallas_interpret())
+    choice = _tune.get(_tune.int8_key(qt.q.shape[0], qt.q.shape[1],
+                                      x.shape[0], interp))
+    if choice is not None and choice.impl == "xla":
+        from repro.core import quant as _q
+        return bias_act_epilogue(_q.int8_matmul_ref(x, qt), bias,
+                                 activation)
+    if choice is not None:
+        for t in ("bm", "bn", "bk"):
+            if choice.tile(t):
+                kw.setdefault(t, choice.tile(t))
+    return _i8.int8_matmul(x, qt.q, qt.scale, bias=bias,
+                           activation=activation, **kw)
+
+
+def acsr_spmv(blocked, x, bias=None, activation=None, **kw):
+    """ACSR / AIDA fused pipeline; (mb, bk) come from the autotuner cache
+    when a winner was recorded for this geometry."""
+    interp = kw.setdefault("interpret", pallas_interpret())
+    choice = _tune.get(_tune.acsr_key(
+        blocked.nblocks, blocked.rmax, blocked.block_rows, x.shape[0],
+        x.shape[1] if x.ndim == 2 else 1,
+        blocked.centroids is not None, interp))
+    if choice is not None:
+        for t in ("mb", "bk"):
+            if choice.tile(t):
+                kw.setdefault(t, choice.tile(t))
+    return _sp.acsr_spmv(blocked, x, bias=bias, activation=activation, **kw)

@@ -52,23 +52,25 @@ def acsr_spmv_ref(values: jnp.ndarray, col_idx: jnp.ndarray,
 
 
 def blocked_acsr_spmv_ref(values: jnp.ndarray, col_idx: jnp.ndarray,
-                          seg_local: jnp.ndarray, x: jnp.ndarray,
+                          row_nnz: jnp.ndarray, x: jnp.ndarray,
                           block_rows: int) -> jnp.ndarray:
-    """Row-blocked variant oracle.
+    """Row-blocked slot-schedule oracle.
 
-    values/col_idx/seg_local: [nblocks, me]; x [K] or [K,B].
+    values/col_idx: [nblocks, rmax, block_rows]; row_nnz: [nblocks,
+    block_rows]; x [K] or [K,B].  Lane = matrix row, slots past a row's
+    population are padding (masked by row_nnz).
     Returns [nblocks*block_rows] or [nblocks*block_rows, B].
     """
-    nblocks, me = values.shape
-    out_rows = nblocks * block_rows
-
-    def one(vals, cols, segs):
-        g = jnp.take(x, cols, axis=0)
-        prod = (vals[:, None] if x.ndim == 2 else vals) * g
-        return jax.ops.segment_sum(prod, segs,
-                                   num_segments=block_rows + 1)[:block_rows]
-
-    out = jax.vmap(one)(values, col_idx, seg_local)
+    nblocks, rmax, br = values.shape
+    out_rows = nblocks * br
+    live = (jnp.arange(rmax)[None, :, None]
+            < row_nnz[:, None, :])                       # [nb, rmax, br]
+    g = jnp.take(x, col_idx.astype(jnp.int32).reshape(-1), axis=0)
+    g = g.reshape(nblocks, rmax, br, -1) if x.ndim == 2 \
+        else g.reshape(nblocks, rmax, br)
+    vals = jnp.where(live, values.astype(jnp.float32), 0.0)
+    prod = (vals[..., None] * g) if x.ndim == 2 else vals * g
+    out = prod.sum(axis=1)                               # slot-axis reduce
     return out.reshape(out_rows, -1) if x.ndim == 2 else out.reshape(out_rows)
 
 

@@ -1,0 +1,310 @@
+"""Per-layer kernel autotuner — tile search + winner cache for the FC paths.
+
+Decode FC shapes are few and static, so the right tile parameters can be
+searched *once per (shape, mode, backend)* on real timings and then read
+back at trace time by the `ops` dispatchers:
+
+  acsr / aida   (mb, bk)       — fused row blocks per grid step, K tile
+  int8 / lut    impl + (bm, bn, bk) — Pallas tiles, or the XLA reference
+                                 (the MXU tiling that wins on TPU loses to
+                                 a fused XLA matmul on interpret-mode hosts;
+                                 the tuner measures instead of guessing)
+  block_rows    — encode-time row-block height (searched at compress time
+                  when REPRO_TUNE_BLOCK_ROWS=1; re-encodes per candidate)
+
+`Engine.session()` calls :func:`tune_params` before compiling the decode
+step, so every unique CompressedFC geometry is tuned eagerly (outside any
+jit trace) and the jitted step picks the winners up at trace time.
+`Engine.benchmark` embeds :func:`snapshot` into BENCH_api.json so the
+chosen tiles ship with every recorded perf number.
+
+The cache is process-global and keyed on everything that changes the
+winner: kind, geometry, batch width, and interpret vs native lowering.
+Tiles are read at trace time — re-tuning after a step has been compiled
+does not retroactively change that step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Key = Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelChoice:
+    """One point in a kernel's implementation/tile space."""
+    impl: str = "pallas"
+    tiles: Tuple[Tuple[str, int], ...] = ()
+    us: float = float("nan")          # measured microseconds (best run)
+
+    def tile(self, name: str, default: Optional[int] = None) -> Optional[int]:
+        return dict(self.tiles).get(name, default)
+
+    def to_json(self) -> dict:
+        d = {"impl": self.impl, **dict(self.tiles)}
+        if np.isfinite(self.us):
+            d["us"] = round(self.us, 1)
+        return d
+
+
+_CACHE: Dict[Key, KernelChoice] = {}
+
+
+def get(key: Key) -> Optional[KernelChoice]:
+    return _CACHE.get(key)
+
+
+def record(key: Key, choice: KernelChoice) -> None:
+    _CACHE[key] = choice
+
+
+def clear() -> None:
+    _CACHE.clear()
+
+
+def snapshot() -> dict:
+    """JSON-ready view of every tuned winner (key -> impl/tiles/us)."""
+    return {"/".join(str(p) for p in key): choice.to_json()
+            for key, choice in sorted(_CACHE.items(), key=lambda kv: kv[0])}
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "1") not in ("0", "false")
+
+
+# ------------------------------------------------------------------- keys
+def acsr_key(nblocks: int, rmax: int, block_rows: int, k: int, batch: int,
+             coded: bool, interpret: bool) -> Key:
+    return ("aida" if coded else "acsr", nblocks, rmax, block_rows, k,
+            batch, "interp" if interpret else "tpu")
+
+
+def int8_key(n: int, k: int, batch: int, interpret: bool) -> Key:
+    return ("int8", n, k, batch, "interp" if interpret else "tpu")
+
+
+def lut_key(n: int, k: int, batch: int, interpret: bool) -> Key:
+    return ("codebook4", n, k, batch, "interp" if interpret else "tpu")
+
+
+# ------------------------------------------------------------- candidates
+def acsr_candidates(nblocks: int, k: int) -> List[KernelChoice]:
+    mbs = sorted({m for m in (1, 2, 4, 8) if m <= max(1, nblocks)})
+    bks = sorted({min(k, b) for b in (256, 512, k)}) if k > 256 else [k]
+    return [KernelChoice("pallas", (("mb", mb), ("bk", bk)))
+            for mb in mbs for bk in bks]
+
+
+def int8_candidates(n: int, k: int) -> List[KernelChoice]:
+    tiles = [(8, 128, 512), (8, 256, 256), (16, 128, 128), (8, 512, 512)]
+    cands = [KernelChoice("xla")]
+    for bm, bn, bk in tiles:
+        cands.append(KernelChoice("pallas", (
+            ("bm", bm), ("bn", min(bn, n)), ("bk", min(bk, k)))))
+    return cands
+
+
+def lut_candidates(n: int, k: int) -> List[KernelChoice]:
+    tiles = [(8, 128, 512), (8, 128, 256), (8, 256, 512)]
+    cands = [KernelChoice("xla")]
+    for bm, bn, bk in tiles:
+        cands.append(KernelChoice("pallas", (
+            ("bm", bm), ("bn", min(bn, n)), ("bk", min(bk, k)))))
+    return cands
+
+
+# ---------------------------------------------------------------- search
+def autotune(key: Key, candidates: Sequence[KernelChoice],
+             runner: Callable[[KernelChoice], object], *,
+             reps: int = 3, inner: int = 3) -> KernelChoice:
+    """Time each candidate (1 warmup, then ``reps`` samples of ``inner``
+    back-to-back calls, best sample) and cache the winner under ``key``.
+    Sub-ms kernels need the inner loop — single-call samples are noise on
+    a busy host and a wrong pick taxes every decode step afterwards.
+    Candidates that fail to compile or run are skipped; an already-cached
+    key returns immediately."""
+    import jax
+    cached = get(key)
+    if cached is not None:
+        return cached
+    best: Optional[KernelChoice] = None
+    for cand in candidates:
+        try:
+            jax.block_until_ready(runner(cand))          # warmup/compile
+            t_best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                for _ in range(inner):
+                    out = runner(cand)
+                jax.block_until_ready(out)
+                t_best = min(t_best, (time.perf_counter() - t0) / inner)
+        except Exception:
+            continue
+        timed = dataclasses.replace(cand, us=t_best * 1e6)
+        if best is None or timed.us < best.us:
+            best = timed
+    if best is None:  # nothing ran — record a no-op marker so we don't loop
+        best = KernelChoice("pallas")
+    record(key, best)
+    return best
+
+
+# ------------------------------------------------------- layer-level entry
+def _layer0_view(layer):
+    """A single-layer view of a (possibly [L, ...]-stacked) CompressedFC."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import sparse_fc as sfc
+
+    def unstack(x):
+        return x[0] if isinstance(x, jnp.ndarray) else x
+
+    leaves, treedef = jax.tree_util.tree_flatten(layer)
+    ndims = {"dense": 2, "int8": 2, "codebook4": 2, "acsr": 3, "aida": 3}
+    # stacked leaves carry one extra leading dim vs the single-layer layout
+    want = ndims[layer.mode]
+    probe = leaves[0]
+    if probe.ndim > want:
+        leaves = [unstack(x) for x in leaves]
+    lay = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(lay, sfc.CompressedFC)
+    return lay
+
+
+def tune_layer(layer, batch: int, interpret: bool) -> Optional[KernelChoice]:
+    """Search tiles for one CompressedFC (stacked or single-layer) at the
+    given decode batch width.  Returns the winner (or None for modes with
+    nothing to tune)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import sparse_fc as sfc
+    from repro.kernels import int8_matmul as i8
+    from repro.kernels import lut_matmul as lm
+    from repro.kernels import acsr_spmv as sp
+    from repro.kernels import ref
+
+    lay = _layer0_view(layer)
+    n_out, n_in = lay.shape
+    rng = np.random.default_rng(0)
+    if lay.mode in ("acsr", "aida"):
+        b = lay.blocked
+        key = acsr_key(b.nblocks, b.rmax, b.block_rows, n_in, batch,
+                       b.centroids is not None, interpret)
+        if get(key) is not None:
+            return get(key)
+        x = jnp.asarray(rng.normal(size=(n_in, batch)).astype(np.float32))
+
+        def run(c):
+            return sp.acsr_spmv(b, x, mb=c.tile("mb"), bk=c.tile("bk"),
+                                interpret=interpret)
+        return autotune(key, acsr_candidates(b.nblocks, n_in), run)
+    if lay.mode == "int8":
+        key = int8_key(n_out, n_in, batch, interpret)
+        if get(key) is not None:
+            return get(key)
+        x = jnp.asarray(rng.normal(size=(batch, n_in)).astype(np.float32))
+        from repro.core import quant as q
+        # jit the XLA candidate — inside a decode step it runs XLA-fused
+        xla_run = jax.jit(lambda xx: q.int8_matmul_ref(xx, lay.qt))
+
+        def run(c):
+            if c.impl == "xla":
+                return xla_run(x)
+            return i8.int8_matmul(x, lay.qt.q, lay.qt.scale,
+                                  bm=c.tile("bm"), bn=c.tile("bn"),
+                                  bk=c.tile("bk"), interpret=interpret)
+        return autotune(key, int8_candidates(n_out, n_in), run)
+    if lay.mode == "codebook4":
+        key = lut_key(n_out, n_in, batch, interpret)
+        if get(key) is not None:
+            return get(key)
+        x = jnp.asarray(rng.normal(size=(batch, n_in)).astype(np.float32))
+        xla_run = jax.jit(lambda xx: ref.lut_matmul_ref(
+            xx, lay.codes_packed, lay.centroids))
+
+        def run(c):
+            if c.impl == "xla":
+                return xla_run(x)
+            return lm.lut_matmul(x, lay.codes_packed, lay.centroids,
+                                 bm=c.tile("bm"), bn=c.tile("bn"),
+                                 bk=c.tile("bk"), interpret=interpret)
+        return autotune(key, lut_candidates(n_out, n_in), run)
+    return None
+
+
+def tune_params(params, batch: int, interpret: bool) -> int:
+    """Tune every unique CompressedFC geometry found in a param pytree.
+    Returns the number of newly tuned cache entries."""
+    import jax
+    from repro.core import sparse_fc as sfc
+
+    before = len(_CACHE)
+
+    def visit(leaf):
+        # no (mode, shape)-level dedupe: same-shape projections can still
+        # differ in geometry (rmax varies per weight matrix), and the
+        # cache key is the real dedupe — tune_layer returns immediately
+        # on a key hit
+        if isinstance(leaf, sfc.CompressedFC) and leaf.mode != "dense":
+            tune_layer(leaf, batch, interpret)
+        return leaf
+
+    jax.tree_util.tree_map(
+        visit, params,
+        is_leaf=lambda x: isinstance(x, sfc.CompressedFC))
+    return len(_CACHE) - before
+
+
+# --------------------------------------------------- encode-time block_rows
+_BLOCK_ROWS_CACHE: Dict[Tuple, int] = {}
+
+
+def choose_block_rows(w: np.ndarray, mode: str, density: float,
+                      default: int = 128, batch: int = 2,
+                      candidates: Sequence[int] = (64, 128, 256),
+                      interpret: bool = True) -> int:
+    """Encode-time tile search over the row-block height (re-encodes the
+    pruned matrix per candidate and times the fused kernel).  Cached by
+    (shape, mode); only consulted when REPRO_TUNE_BLOCK_ROWS=1 since
+    re-encoding per candidate is much slower than the (mb, bk) search."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import acsr_spmv as sp
+
+    key = (w.shape, mode, density)
+    if key in _BLOCK_ROWS_CACHE:
+        return _BLOCK_ROWS_CACHE[key]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(w.shape[1], batch)).astype(np.float32))
+    best, best_t = default, float("inf")
+    for br in candidates:
+        try:
+            if mode == "aida":
+                # time the coded kernel the real decode will run
+                nz = w[w != 0]
+                cents = np.concatenate(
+                    [[0.0], np.quantile(nz, np.linspace(0.02, 0.98, 15))]
+                ).astype(np.float32) if nz.size else np.zeros(16, np.float32)
+                blocked = sp.block_encode_coded(w, cents, block_rows=br)
+            else:
+                blocked = sp.block_encode(w, block_rows=br)
+            out = sp.acsr_spmv(blocked, x, interpret=interpret)
+            jax.block_until_ready(out)
+            dt = float("inf")  # best-of-3 samples of 3 calls (noise floor)
+            for _ in range(3):
+                t0 = time.perf_counter()
+                for _ in range(3):
+                    out = sp.acsr_spmv(blocked, x, interpret=interpret)
+                jax.block_until_ready(out)
+                dt = min(dt, (time.perf_counter() - t0) / 3)
+        except Exception:
+            continue
+        if dt < best_t:
+            best, best_t = br, dt
+    _BLOCK_ROWS_CACHE[key] = best
+    return best

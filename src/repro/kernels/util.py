@@ -1,0 +1,25 @@
+"""Shared helpers for the FC kernel family (Pallas bodies + XLA refs)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def apply_activation(name: Optional[str], y):
+    """The fused-epilogue activation table.  One definition, shared by the
+    Pallas kernel epilogues and the XLA reference paths, so the two can
+    never drift apart."""
+    if name is None or name == "none":
+        return y
+    if name == "relu":
+        return jax.nn.relu(y)
+    if name == "silu":
+        return jax.nn.silu(y)
+    if name == "gelu":
+        return jax.nn.gelu(y, approximate=True)
+    raise ValueError(f"unknown fused activation {name!r}")

@@ -31,22 +31,29 @@ def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
     return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
 
 
-def dense(x, w, bias=None):
-    """x @ w (+bias).  ``w`` may be a raw [d_in, d_out] matrix OR any
+def dense(x, w, bias=None, activation=None):
+    """act(x @ w + bias).  ``w`` may be a raw [d_in, d_out] matrix OR any
     compressed leaf registered with repro.api.dispatch (e.g. a
     core.sparse_fc.CompressedFC, the AIDA serving mode) — compression is
-    transparent to every projection in the model zoo."""
+    transparent to every projection in the model zoo.
+
+    For compressed leaves, bias and activation ride into the kernel
+    epilogue (one fused pass, no extra HBM round-trip); the raw-matmul
+    path keeps the historical op order bit-for-bit."""
     apply = _dispatch.applier_for(w)
     if apply is not None:
         lead = x.shape[:-1]
-        y = apply(w, x.reshape(-1, x.shape[-1]).astype(jnp.float32))
-        y = y.reshape(*lead, y.shape[-1])
-    else:
-        y = jnp.matmul(x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE),
-                       preferred_element_type=_matmul_out_dtype())
+        y = apply(w, x.reshape(-1, x.shape[-1]).astype(jnp.float32),
+                  bias=bias, activation=activation)
+        return y.reshape(*lead, y.shape[-1]).astype(COMPUTE_DTYPE)
+    y = jnp.matmul(x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE),
+                   preferred_element_type=_matmul_out_dtype())
     if bias is not None:
         y = y + bias.astype(jnp.float32)
-    return y.astype(COMPUTE_DTYPE)
+    y = y.astype(COMPUTE_DTYPE)
+    if activation is not None:
+        y = _act(activation, y.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return y
 
 
 def rms_norm_init(d: int):
@@ -107,12 +114,11 @@ def _act(name: str, x):
 
 
 def mlp(x, p, act: str = "silu"):
-    up = dense(x, p["up"])
     if "gate" in p:
-        up = _act(act, dense(x, p["gate"]).astype(jnp.float32)).astype(
-            COMPUTE_DTYPE) * up
+        # activation fuses into the gate projection's kernel epilogue
+        up = dense(x, p["gate"], activation=act) * dense(x, p["up"])
     else:
-        up = _act(act, up.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+        up = dense(x, p["up"], activation=act)
     return dense(up, p["down"])
 
 

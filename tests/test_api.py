@@ -181,25 +181,10 @@ def test_estimate_named_workloads():
     assert t1["aida"]["pp_gops"] / t1["eie"]["pp_gops"] > 10  # paper: 14.5x
 
 
-# ------------------------------------------------------- deprecation shims
-def test_serve_engine_shim_warns():
-    import jax as _jax
-    from repro.models import model as M
-    from repro.serve.engine import Request, ServeEngine
-    params = M.init_params(CFG, _jax.random.PRNGKey(0))
-    with pytest.warns(DeprecationWarning, match="repro.api"):
-        eng = ServeEngine(CFG, params, batch_slots=1, max_len=16)
-    eng.submit(Request(prompt=[1, 2], max_new=2, rid=0))
-    res = eng.run()
-    assert len(res) == 1 and len(res[0].tokens) == 2
-
-
-def test_compress_params_shim_warns():
-    import jax as _jax
-    from repro.models import model as M
-    from repro.serve.compress import compress_params
-    params = M.init_params(CFG, _jax.random.PRNGKey(0))
-    with pytest.warns(DeprecationWarning, match="repro.api"):
-        cparams, stats = compress_params(params, mode="int8", verbose=None)
-    assert stats["n_compressed"] > 0
-    assert type(cparams["layers"]["attn"]["wq"]).__name__ == "CompressedFC"
+# --------------------------------------------------- former shim surface
+def test_serve_shims_removed():
+    """The PR-1 deprecation shims are gone; repro.api is the only entry."""
+    with pytest.raises(ImportError):
+        import repro.serve.engine  # noqa: F401
+    with pytest.raises(ImportError):
+        import repro.serve.compress  # noqa: F401

@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs import get, reduced
 from repro.models import model as M
-from repro.serve.compress import compress_params
+from repro.api.compress import compress_params
 
 CFG = reduced(get("llama3-8b"), n_layers=2, d_model=128, d_ff=256, vocab=256)
 

@@ -17,7 +17,7 @@ from repro.runtime import compression
 from repro.runtime.fault_tolerance import (HeartbeatRegistry, RestartLoop,
                                            StragglerDetector,
                                            plan_elastic_mesh)
-from repro.serve.engine import Request, ServeEngine
+from repro.api.session import Request, Session
 from repro.train import trainer
 
 CFG = reduced(get("llama3-8b"), n_layers=2, d_model=64, d_ff=128, vocab=128)
@@ -188,7 +188,7 @@ def test_elastic_restore_onto_smaller_mesh(tmp_path):
 def test_serve_engine_continuous_batching():
     cfg = CFG
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    eng = Session(cfg, params, batch_slots=2, max_len=64)
     for rid in range(5):  # more requests than slots -> continuous batching
         eng.submit(Request(prompt=[1 + rid, 2, 3], max_new=4, rid=rid))
     results = eng.run()
@@ -201,7 +201,7 @@ def test_serve_engine_matches_manual_decode():
     cfg = CFG
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     prompt = [5, 9, 2]
-    eng = ServeEngine(cfg, params, batch_slots=1, max_len=32)
+    eng = Session(cfg, params, batch_slots=1, max_len=32)
     eng.submit(Request(prompt=prompt, max_new=3, rid=0))
     got = eng.run()[0].tokens
 
