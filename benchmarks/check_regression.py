@@ -13,6 +13,15 @@ uniformly (normalized holds), but a change that actually slows a kernel
 loses on the same machine in both units.  Also re-asserts the cost-model
 invariants recorded in the file (emulator exactness + emulator/cycle-sim
 agreement).
+
+The paged-KV section ("kv") is gated too:
+  * KV bytes/token ratio must stay <= KV_BYTES_CEIL (deterministic
+    accounting — any regression here is a real layout change);
+  * paged serving must hold parity with the dense cache: the
+    paged/full tok/s ratio (same run, same host, so host speed cancels)
+    passes within tol of 1.0 or of the baseline's ratio;
+  * the attention/FC time-share fields must be present and sane —
+    they are the trajectory signal the next attention PR builds on.
 """
 from __future__ import annotations
 
@@ -21,6 +30,8 @@ import json
 import sys
 
 GATED_MODES = ("int8", "codebook4", "acsr", "aida")
+#: paged int8 KV must keep at least this bytes/token win vs dense bf16
+KV_BYTES_CEIL = 0.55
 
 
 def _rel(run: dict, mode: str):
@@ -58,6 +69,40 @@ def check(new: dict, base: dict, tol: float, log=print) -> bool:
     if not inv.get("cycle-sim", {}).get("agrees_with_emulator", False):
         log("  emulator/cycle-sim agreement LOST")
         ok = False
+    ok &= check_kv(new, base, tol, log=log)
+    return ok
+
+
+def check_kv(new: dict, base: dict, tol: float, log=print) -> bool:
+    kv = new.get("kv")
+    if kv is None:
+        log("  kv section MISSING from new run")
+        return False
+    ok = True
+    bytes_ratio = kv.get("kv_bytes_per_token", {}).get("ratio")
+    if bytes_ratio is None or bytes_ratio > KV_BYTES_CEIL:
+        log(f"  kv bytes/token ratio {bytes_ratio} exceeds "
+            f"{KV_BYTES_CEIL} — paged int8 lost its memory win")
+        ok = False
+    ratio = kv.get("paged_over_full")
+    base_ratio = base.get("kv", {}).get("paged_over_full")
+    par_ok = ratio is not None and ratio >= 1.0 - tol
+    hist_ok = (ratio is not None and base_ratio is not None
+               and ratio >= base_ratio * (1.0 - tol))
+    if not (par_ok or hist_ok):
+        log(f"  paged/full step-time parity LOST "
+            f"(ratio {ratio}, baseline {base_ratio}, tol {tol:.0%})")
+        ok = False
+    share = kv.get("attn_time_share", {})
+    for kind in ("full", "paged"):
+        s = share.get(kind)
+        if s is None or not (0.0 < s < 1.0):
+            log(f"  attn_time_share[{kind}] missing or insane: {s}")
+            ok = False
+    if ok:
+        log(f"  kv         paged/full x{ratio:.2f}  "
+            f"bytes/token x{bytes_ratio:.2f}  attn share "
+            f"{share.get('full'):.0%} -> {share.get('paged'):.0%}  OK")
     return ok
 
 

@@ -42,6 +42,16 @@ def bench_api(out_path: str = "BENCH_api.json") -> dict:
     for mode, rec in data["modes"].items():
         print(f"  {mode:10s} [{rec['backend']:9s}] {rec['tok_per_s']:8.1f} "
               f"tok/s  ratio {rec['compression_ratio']:.2f}x")
+    kv = data.get("kv")
+    if kv:
+        share = kv["attn_time_share"]
+        bpt = kv["kv_bytes_per_token"]
+        print(f"  kv[{kv['mode']}]    full {kv['full']['tok_per_s']:.1f} "
+              f"tok/s vs paged {kv['paged']['tok_per_s']:.1f} "
+              f"(x{kv['paged_over_full']:.2f}); attn share "
+              f"full {share['full']:.0%} / paged {share['paged']:.0%}; "
+              f"KV {bpt['paged_int8']:.0f} vs {bpt['dense_bf16']:.0f} "
+              f"B/token ({bpt['ratio']:.2f}x)")
     sim = data["backends"]["cycle-sim"]
     print(f"  ap-emulator FC cycles: "
           f"{data['backends']['ap-emulator']['fc_cycles']}  "

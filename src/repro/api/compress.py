@@ -106,7 +106,8 @@ def compress_params(params: Dict, spec: CompressionSpec = None, *,
         per = [sfc.compress(np.asarray(leaf[i]).T, mode=leaf_mode,
                             density=spec.density, k=spec.k,
                             block_rows=block_rows,
-                            kmeans_iters=spec.kmeans_iters)
+                            kmeans_iters=spec.kmeans_iters,
+                            dtype=spec.dtype)
                for i in range(L)]
         out = _stack_compressed(per)
         stats["n_compressed"] += L

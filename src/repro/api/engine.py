@@ -101,34 +101,51 @@ class Engine:
 
     # ------------------------------------------------------------- serve
     def session(self, batch_slots: int = 4, max_len: int = 256,
-                seed: int = 0) -> Session:
+                seed: int = 0, kv_cache: Optional[str] = None,
+                page_size: int = 16,
+                kv_pool_pages: Optional[int] = None,
+                kv_dtype: Optional[str] = None) -> Session:
         """A continuous-batching serving session on the active backend.
 
         On the Pallas backend, every unique compressed-FC geometry is
         autotuned for this batch width *before* the decode step compiles,
         so the jitted step traces against the winning tiles
-        (kernels.tune; disable with REPRO_AUTOTUNE=0)."""
+        (kernels.tune; disable with REPRO_AUTOTUNE=0).  A paged-KV
+        session additionally pre-tunes the paged-attention impl/tile
+        choice for this (geometry, batch, backend).
+        """
         if self.cfg is None:
             raise ValueError("serving needs an ArchConfig")
         backend = self.backend
         if not backend.caps.batched_decode:
             raise CapabilityError(
                 f"backend {backend.name!r} cannot serve (no batched decode)")
+        from repro.kernels import ops, tune
         if backend.name == "pallas" and self.compression is not None:
-            from repro.kernels import ops, tune
             if tune.enabled():
                 tune.tune_params(self.params, batch_slots,
                                  ops.pallas_interpret())
+        import repro.api.session as sess_mod
+        resolved_kv = (sess_mod.KV_CACHE_DEFAULT if kv_cache is None
+                       else kv_cache)
+        if resolved_kv == "paged" and self.cfg.family != "rwkv6" \
+                and tune.enabled():
+            tune.tune_paged(self.cfg, batch_slots, max_len, page_size,
+                            kv_dtype or sess_mod.KV_DTYPE_DEFAULT,
+                            ops.pallas_interpret())
         return Session(self.cfg, self.params, batch_slots=batch_slots,
-                       max_len=max_len, seed=seed, backend=backend)
+                       max_len=max_len, seed=seed, backend=backend,
+                       kv_cache=kv_cache, page_size=page_size,
+                       kv_pool_pages=kv_pool_pages, kv_dtype=kv_dtype)
 
     def serve(self, requests: Sequence[Union[Request, List[int]]],
               *, batch_slots: int = 4, max_len: int = 256,
-              max_steps: int = 10_000, seed: int = 0) -> List[Result]:
+              max_steps: int = 10_000, seed: int = 0,
+              kv_cache: Optional[str] = None) -> List[Result]:
         """Serve a batch of requests to completion (continuous batching).
         Results come back in deterministic rid order."""
         sess = self.session(batch_slots=batch_slots, max_len=max_len,
-                            seed=seed)
+                            seed=seed, kv_cache=kv_cache)
         for rid, req in enumerate(requests):
             if not isinstance(req, Request):
                 req = Request(prompt=list(req), rid=rid)
@@ -155,10 +172,164 @@ class Engine:
         return ex.estimate(workload, **kw)
 
     # --------------------------------------------------------- benchmark
+    def kv_benchmark(self, mode: str = "aida", requests: int = 8,
+                     max_new: int = 24, batch_slots: int = 2,
+                     max_len: int = 64, page_size: int = 16,
+                     density: float = 0.25) -> dict:
+        """Paged-vs-dense KV cache comparison on one compressed mode:
+        serve the same request mix through both cache kinds (step-time
+        parity check), record KV bytes/token, and micro-time the
+        attention-vs-FC split of a decode step (the share the paged
+        subsystem exists to attack)."""
+        from repro import kvstore as kvs
+        from repro.kernels import tune
+        cfg = self.cfg
+        if cfg is None or cfg.family == "rwkv6":
+            raise CapabilityError(
+                "kv_benchmark needs an attention arch (rwkv6 has no KV "
+                "cache to page)")
+        eng = Engine(cfg, params=self.params)
+        if mode != "dense":
+            eng.compress(CompressionSpec(mode=mode, density=density),
+                         verbose=None)
+        reqs = [Request(prompt=[1, 2 + i % 7, 3], max_new=max_new, rid=i)
+                for i in range(requests)]
+        out = {"mode": mode, "page_size": page_size, "max_len": max_len,
+               "batch_slots": batch_slots}
+        seen_tiles = set(tune.snapshot())
+        # interleaved best-of rounds: the paged/full ratio is only
+        # host-speed-invariant if both sides see the same load, so
+        # alternate them and keep each side's best pass
+        for rnd in range(3):
+            for kind in ("full", "paged"):
+                sess = eng.session(batch_slots=batch_slots,
+                                   max_len=max_len, kv_cache=kind,
+                                   page_size=page_size)
+                sess.submit(Request(prompt=[1], max_new=1, rid=-1))
+                sess.run()  # warm the compiled step
+                sess.results.clear()
+                for r in reqs:
+                    sess.submit(r)
+                t0 = time.perf_counter()
+                res = sess.run()
+                dt = time.perf_counter() - t0
+                n_tok = sum(len(r.tokens) for r in res)
+                if kind in out and out[kind]["tok_per_s"] >= n_tok / dt:
+                    continue
+                rec = {"tokens": n_tok, "seconds": round(dt, 4),
+                       "tok_per_s": round(n_tok / dt, 2)}
+                if kind == "paged":
+                    rec["pages_peak"] = sess.stats["pages_peak"]
+                    rec["page_allocs"] = sess.stats["page_allocs"]
+                    snap = tune.snapshot()
+                    rec["tiles"] = {k: v for k, v in snap.items()
+                                    if k not in seen_tiles}
+                out[kind] = rec
+        out["paged_over_full"] = round(
+            out["paged"]["tok_per_s"] / out["full"]["tok_per_s"], 3)
+        pbt = kvs.kv_bytes_per_token(cfg.n_kv, cfg.head_dim,
+                                     page_size) * cfg.n_layers
+        dbt = kvs.dense_kv_bytes_per_token(cfg.n_kv,
+                                           cfg.head_dim) * cfg.n_layers
+        out["kv_bytes_per_token"] = {
+            "paged_int8": round(pbt, 1), "dense_bf16": round(dbt, 1),
+            "ratio": round(pbt / dbt, 4)}
+        out["attn_time_share"] = self._attn_fc_share(
+            eng, batch_slots, max_len, page_size)
+        return out
+
+    def _attn_fc_share(self, eng: "Engine", batch: int, max_len: int,
+                       page_size: int) -> dict:
+        """Micro-decomposition of a decode step at full cache occupancy:
+        attention term (cache update + attend, per layer x L) vs the FC
+        term (every compressed projection at this batch width).  Shares
+        are from best-of timings of the jitted pieces — the honest signal
+        behind 'attention is now the dominant share' (ROADMAP)."""
+        import jax
+        from repro import kvstore as kvs
+        from repro.core import sparse_fc as sfc
+        from repro.kernels import tune
+        from repro.models import attention as attn
+        from repro.models import kvcache as kvc
+        import jax.numpy as jnp
+        cfg = self.cfg
+        rng = np.random.default_rng(0)
+
+        def timeit(fn, *args):
+            jax.block_until_ready(fn(*args))
+            best = float("inf")
+            for _ in range(5):
+                t0 = time.perf_counter()
+                for _ in range(3):
+                    o = fn(*args)
+                jax.block_until_ready(o)
+                best = min(best, (time.perf_counter() - t0) / 3)
+            return best
+
+        hkv, h, dh = cfg.n_kv, cfg.n_heads, cfg.head_dim
+        scale = dh ** -0.5
+        q = jnp.asarray(rng.normal(size=(batch, h, 1, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(batch, hkv, 1, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(batch, hkv, 1, dh)), jnp.float32)
+        cur = jnp.full((batch,), max_len - 1, jnp.int32)
+        cache = kvc.init_cache(batch, hkv, max_len, dh)
+        cache = cache._replace(pos=jnp.broadcast_to(
+            jnp.arange(max_len, dtype=jnp.int32)[None], (batch, max_len)))
+        t_full = timeit(jax.jit(
+            lambda c, qq, kk, vv, p: attn.decode_attend(
+                c, qq, kk, vv, p, window=jnp.int32(-1), scale=scale)[1]),
+            cache, q, k, v, cur)
+        npp = -(-max_len // page_size)
+        pool = kvs.init_pool(1 + batch * npp, hkv, page_size, dh)
+        pool = pool._replace(
+            k_scale=jnp.ones_like(pool.k_scale),
+            v_scale=jnp.ones_like(pool.v_scale),
+            k_pages=jnp.asarray(rng.integers(
+                -127, 128, pool.k_pages.shape), jnp.int8),
+            v_pages=jnp.asarray(rng.integers(
+                -127, 128, pool.v_pages.shape), jnp.int8))
+        table = jnp.asarray(
+            1 + np.arange(batch * npp).reshape(batch, npp), jnp.int32)
+        t_paged = timeit(jax.jit(
+            lambda pl, qq, kk, vv, p: attn.decode_attend_paged(
+                pl, table, qq, kk, vv, p, window=jnp.int32(-1),
+                scale=scale)[1]),
+            pool, q, k, v, cur)
+        # FC term: every compressed projection leaf, layer-0 view x L
+        t_fc = 0.0
+
+        def visit(leaf):
+            nonlocal t_fc
+            if isinstance(leaf, sfc.CompressedFC):
+                lay = tune._layer0_view(leaf)
+                x = jnp.asarray(rng.normal(size=(batch, lay.shape[1])),
+                                jnp.float32)
+                t_fc += timeit(jax.jit(
+                    lambda xx: sfc.apply_fc(lay, xx)), x) * cfg.n_layers
+            elif getattr(leaf, "ndim", 0) == 3:   # raw [L, d_in, d_out]
+                w = leaf[0]
+                x = jnp.asarray(rng.normal(size=(batch, w.shape[0])),
+                                jnp.float32)
+                t_fc += timeit(jax.jit(
+                    lambda xx, ww: jnp.matmul(xx, ww)), x, w) \
+                    * cfg.n_layers
+            return leaf
+
+        jax.tree_util.tree_map(
+            visit, eng.params["layers"],
+            is_leaf=lambda x: isinstance(x, sfc.CompressedFC))
+        a_full, a_paged = t_full * cfg.n_layers, t_paged * cfg.n_layers
+        return {"attn_us_full": round(a_full * 1e6, 1),
+                "attn_us_paged": round(a_paged * 1e6, 1),
+                "fc_us": round(t_fc * 1e6, 1),
+                "full": round(a_full / max(a_full + t_fc, 1e-12), 4),
+                "paged": round(a_paged / max(a_paged + t_fc, 1e-12), 4)}
+
     def benchmark(self, modes: Sequence[str] = ("dense", "aida"),
                   requests: int = 4, max_new: int = 8,
                   batch_slots: int = 2, density: float = 0.25,
-                  problem: Optional[FCProblem] = None) -> dict:
+                  problem: Optional[FCProblem] = None,
+                  kv_mode: Optional[str] = "aida") -> dict:
         """Serve each mode through the facade and price the cost-model
         backends on one FC instance; returns a JSON-ready dict
         (benchmarks/run.py writes it to BENCH_api.json)."""
@@ -178,12 +349,20 @@ class Engine:
             sess.submit(Request(prompt=[1], max_new=1, rid=-1))
             sess.run()  # warm the compiled step
             sess.results.clear()
-            for r in reqs:
-                sess.submit(r)
-            t0 = time.perf_counter()
-            res = sess.run()
-            dt = time.perf_counter() - t0
-            n_tok = sum(len(r.tokens) for r in res)
+            # best-of-3 passes: a single load spike on a shared host can
+            # halve one mode's tok/s and flake the CI gate.  (dt, n_tok)
+            # travel as a pair — the fastest pass's own token count.
+            dt, n_tok = float("inf"), 0
+            for _ in range(3):
+                for r in reqs:
+                    sess.submit(r)
+                t0 = time.perf_counter()
+                res = sess.run()
+                pass_dt = time.perf_counter() - t0
+                pass_tok = sum(len(r.tokens) for r in res)
+                sess.results.clear()
+                if pass_tok / pass_dt > (n_tok / dt if n_tok else 0.0):
+                    dt, n_tok = pass_dt, pass_tok
             # tiles the autotuner picked for this mode's layer shapes —
             # recorded so the perf trajectory is reproducible
             snap = tune.snapshot()
@@ -196,6 +375,14 @@ class Engine:
                 "tiles": tiles,
                 "compression_ratio": (round(eng.stats["ratio"], 2)
                                       if eng.stats else 1.0)}
+        if kv_mode is not None and self.cfg.family != "rwkv6":
+            # paged-vs-dense KV cache section (attention time share, KV
+            # bytes/token, paged step-time parity) — gated by
+            # benchmarks/check_regression.py alongside the FC modes;
+            # attention-free archs have nothing to page
+            out["kv"] = self.kv_benchmark(mode=kv_mode,
+                                          batch_slots=batch_slots,
+                                          density=density)
         if problem is None:
             rng = np.random.default_rng(0)
             w = rng.integers(-15, 16, size=(24, 32)) \

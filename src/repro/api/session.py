@@ -6,6 +6,14 @@ stopping the batch (continuous batching).  Prefill is chunk-free
 prompts for a slot are fed before its generation starts.  Greedy or
 temperature sampling.
 
+With ``kv_cache="paged"`` (or REPRO_KV_CACHE=paged) the session swaps the
+dense per-slot KV cache for the kvstore page pool: pages are allocated
+host-side the step a sequence crosses a page boundary, freed the moment
+its request completes (not lazily on refill), and — on pure-SWA
+architectures — reclaimed as soon as they slide fully behind the
+attention window, so resident KV memory tracks *live* tokens, not
+batch·max_len.
+
 Sessions are created by `repro.api.Engine.session()` (or directly); the
 compiled decode step comes from the engine's backend, so dense and
 compressed (Pallas) serving share one code path.
@@ -14,14 +22,21 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import kvstore as kvs
 from repro.api.registry import Executor, get_backend
 from repro.configs.base import ArchConfig
+
+# env knobs resolved ONCE at import (traced code must not read os.environ);
+# per-session override via the kv_cache= / kv_dtype= constructor args
+KV_CACHE_DEFAULT = os.environ.get("REPRO_KV_CACHE", "full")
+KV_DTYPE_DEFAULT = os.environ.get("REPRO_KV_DTYPE", "int8")
 
 # Compiled decode steps keyed by (backend, cfg): sessions on the same
 # config reuse one jitted step (its trace cache handles dense vs
@@ -53,13 +68,44 @@ class Result:
 class Session:
     def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
                  max_len: int = 256, seed: int = 0,
-                 backend: Optional[Executor] = None):
+                 backend: Optional[Executor] = None,
+                 kv_cache: Optional[str] = None, page_size: int = 16,
+                 kv_pool_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
         assert cfg.has_decode, "encoder archs don't serve autoregressively"
         from repro.models import model as M
         self.cfg, self.params = cfg, params
         self.slots = batch_slots
         self.max_len = max_len
-        self.state = M.init_decode_state(cfg, batch_slots, max_len)
+        kv_cache = KV_CACHE_DEFAULT if kv_cache is None else kv_cache
+        if cfg.family == "rwkv6":
+            kv_cache = "full"      # attention-free: nothing to page
+        self.kv_cache = kv_cache
+        self.page_size = page_size
+        self.kv_dtype = kv_dtype or KV_DTYPE_DEFAULT
+        if kv_cache == "paged":
+            self.state = M.init_decode_state(
+                cfg, batch_slots, max_len, kv_cache="paged",
+                page_size=page_size, kv_pool_pages=kv_pool_pages,
+                kv_dtype=self.kv_dtype)
+            n_pages = jax.tree.leaves(
+                self.state["layers"]["kv"])[0].shape[1]
+            self.alloc = kvs.PageAllocator(n_pages)
+            # host mirror of the device page table (allocation decisions
+            # never read device memory back)
+            self.host_table = np.full(
+                (batch_slots, self.state["page_table"].shape[1]), -1,
+                np.int64)
+            self.slot_pos = [0] * batch_slots
+            wins = cfg.layer_windows()
+            # page reclamation is safe only when EVERY layer is windowed
+            # (one global layer pins the whole history, like the dense
+            # path's ring-vs-full split)
+            self._swa_window = max(wins) if wins and all(
+                w > 0 for w in wins) else None
+        else:
+            self.state = M.init_decode_state(cfg, batch_slots, max_len)
+            self.alloc = None
         self.key = jax.random.PRNGKey(seed)
         if backend is None or isinstance(backend, str):
             backend = get_backend(backend or "jax-dense")
@@ -72,6 +118,9 @@ class Session:
         self.queue: Deque[Request] = collections.deque()
         self.results: List[Result] = []
         self.stats = {"steps": 0, "fills": 0}
+        if kv_cache == "paged":
+            self.stats.update({"page_allocs": 0, "pages_in_use": 0,
+                               "pages_peak": 0, "pages_reclaimed_swa": 0})
 
     # ------------------------------------------------------------ public
     def submit(self, req: Request) -> None:
@@ -102,6 +151,22 @@ class Session:
             if x.ndim >= 2 and x.shape[1] == self.slots:  # [L, B, ...]
                 return x.at[:, i].set(jnp.zeros_like(x[:, i]))
             return x
+        if self.kv_cache == "paged":
+            # pool pages are shared, not slot-indexed: release the slot's
+            # pages (idempotent — already freed at request completion) and
+            # zero only the slot-shaped leaves (mamba conv/h etc.).  Stale
+            # page contents are harmless: the position mask never reaches
+            # unwritten slots and scales reset on re-allocation.
+            self._release_slot_pages(i)
+            layers = dict(self.state["layers"])
+            kv = layers.pop("kv")
+            layers = jax.tree.map(zero_slot, layers)
+            layers["kv"] = kv
+            self.state = {"layers": layers,
+                          "pos": self.state["pos"].at[i].set(0),
+                          "page_table": self.state["page_table"]}
+            self.slot_pos[i] = 0
+            return
         layers = jax.tree.map(zero_slot, self.state["layers"])
         pos = self.state["pos"].at[i].set(0)
         # empty cache slots must read as "never written": pos fields are -1
@@ -112,20 +177,107 @@ class Session:
                 pos=kv.pos.at[:, i].set(-jnp.ones_like(kv.pos[:, i])))
         self.state = {"layers": layers, "pos": pos}
 
-    def _advance(self):
-        tokens = np.zeros((self.slots,), np.int32)
+    # ------------------------------------------------------ paged KV admin
+    def _release_slot_pages(self, i: int) -> None:
+        """Free every page owned by slot ``i`` (request done / slot reset)."""
+        pages = [int(p) for p in self.host_table[i] if p >= 0]
+        if not pages:
+            return
+        self.alloc.free(pages)
+        self.host_table[i] = -1
+        self.state["page_table"] = self.state["page_table"].at[i].set(
+            jnp.int32(kvs.NO_PAGE))
+        self.stats["pages_in_use"] = self.alloc.in_use
+
+    def _ensure_pages(self) -> None:
+        """Host-side page faults: before a step, make sure each active
+        slot owns the page its next token lands in; fresh pages get their
+        quantization scales cleared so stale maxima can't poison them."""
+        npp = self.host_table.shape[1]
+        events = []
+        try:
+            for i, req in enumerate(self.slot_req):
+                if req is None:
+                    continue
+                pi = self.slot_pos[i] // self.page_size
+                if pi >= npp or self.host_table[i, pi] >= 0:
+                    continue  # beyond max_len (clamped, like dense cache)
+                pid = self.alloc.alloc()
+                self.host_table[i, pi] = pid
+                events.append((i, pi, pid))
+        except kvs.OutOfPages:
+            # transactional: roll back this round's host-side grants so a
+            # caller that drains requests and retries never sees a page
+            # recorded host-side but absent from the device table
+            for i, pi, pid in events:
+                self.host_table[i, pi] = -1
+            self.alloc.free(pid for _, _, pid in events)
+            raise
+        if not events:
+            return
+        si, pi, pids = (jnp.asarray([e[n] for e in events], jnp.int32)
+                        for n in range(3))
+        self.state["page_table"] = \
+            self.state["page_table"].at[si, pi].set(pids)
+        kv = self.state["layers"]["kv"]
+        if kv.k_scale is not None:
+            kv = kv._replace(k_scale=kv.k_scale.at[:, pids].set(0.0),
+                             v_scale=kv.v_scale.at[:, pids].set(0.0))
+            layers = dict(self.state["layers"])
+            layers["kv"] = kv
+            self.state["layers"] = layers
+        self.stats["page_allocs"] = self.alloc.total_allocs
+        self.stats["pages_in_use"] = self.alloc.in_use
+        self.stats["pages_peak"] = self.alloc.peak
+
+    def _reclaim_swa_pages(self) -> None:
+        """On pure-SWA archs, free pages that slid fully behind the widest
+        layer window — decode memory stays O(window), page-granular."""
+        if self._swa_window is None:
+            return
+        events = []
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
+            dead = kvs.reclaimable_prefix(self.slot_pos[i],
+                                          self._swa_window, self.page_size)
+            for pi in range(min(dead, self.host_table.shape[1])):
+                pid = int(self.host_table[i, pi])
+                if pid >= 0:
+                    self.alloc.free([pid])
+                    self.host_table[i, pi] = -1
+                    events.append((i, pi))
+        if not events:
+            return
+        si = jnp.asarray([e[0] for e in events], jnp.int32)
+        pi = jnp.asarray([e[1] for e in events], jnp.int32)
+        self.state["page_table"] = self.state["page_table"].at[si, pi].set(
+            jnp.int32(kvs.NO_PAGE))
+        self.stats["pages_reclaimed_swa"] += len(events)
+        self.stats["pages_in_use"] = self.alloc.in_use
+
+    def _advance(self):
+        tokens = np.zeros((self.slots,), np.int32)
+        stepped = []
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            stepped.append(i)
             if self.slot_pending[i]:
                 tokens[i] = self.slot_pending[i][0]
             elif self.slot_out[i]:
                 tokens[i] = self.slot_out[i][-1]
             else:
                 tokens[i] = req.prompt[-1]
+        if self.kv_cache == "paged":
+            self._ensure_pages()
         self.state, logits = self._step(self.params, self.state,
                                         jnp.asarray(tokens))
         self.stats["steps"] += 1
+        if self.kv_cache == "paged":
+            for i in stepped:
+                self.slot_pos[i] += 1
+            self._reclaim_swa_pages()
         logits = np.asarray(logits[:, : self.cfg.vocab])
         for i, req in enumerate(self.slot_req):
             if req is None:
@@ -145,3 +297,6 @@ class Session:
             if len(self.slot_out[i]) >= req.max_new:
                 self.results.append(Result(req.rid, self.slot_out[i]))
                 self.slot_req[i] = None
+                if self.kv_cache == "paged":
+                    # return pages eagerly — don't wait for a refill
+                    self._release_slot_pages(i)

@@ -31,12 +31,20 @@ class CompressionSpec:
     k: int = 16
     block_rows: int = 128
     kmeans_iters: int = 25
+    #: value storage dtype for acsr-mode nonzeros: "f32" (exact) or
+    #: "bf16" (halves value bytes — acsr's honest compression ratio
+    #: finally wins vs the bf16-serving baseline; aida/int8/codebook4
+    #: already store sub-f32 values, so they ignore this)
+    dtype: str = "f32"
     overrides: Mapping[str, str] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(
                 f"unknown mode {self.mode!r}; choose from {MODES}")
+        if self.dtype not in ("f32", "bf16"):
+            raise ValueError(
+                f"unknown value dtype {self.dtype!r}; 'f32' or 'bf16'")
         for name, mode in self.overrides.items():
             if mode not in MODES + ("skip",):
                 raise ValueError(

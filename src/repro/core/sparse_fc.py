@@ -74,8 +74,12 @@ jax.tree_util.register_pytree_node(
 
 def compress(w: np.ndarray, mode: str = "aida", density: float = 0.10,
              k: int = 16, block_rows: int = 128,
-             kmeans_iters: int = 25) -> CompressedFC:
-    """Offline Deep-Compression-style pipeline (prune → share → pack)."""
+             kmeans_iters: int = 25, dtype: str = "f32") -> CompressedFC:
+    """Offline Deep-Compression-style pipeline (prune → share → pack).
+
+    ``dtype="bf16"`` stores acsr nonzero values in bfloat16 (the ROADMAP
+    bytes-win variant); other modes already store sub-f32 values and
+    ignore it."""
     w = np.asarray(w, np.float32)
     n_out, n_in = w.shape
     if mode == "dense":
@@ -91,7 +95,8 @@ def compress(w: np.ndarray, mode: str = "aida", density: float = 0.10,
     if mode == "acsr":
         pruned = acsr_mod.prune_topk(w, density)
         return CompressedFC("acsr", (n_out, n_in),
-                            blocked=sp.block_encode(pruned, block_rows))
+                            blocked=sp.block_encode(pruned, block_rows,
+                                                    value_dtype=dtype))
     if mode == "aida":
         pruned = acsr_mod.prune_topk(w, density)
         nz = pruned[pruned != 0]

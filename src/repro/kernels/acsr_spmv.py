@@ -102,12 +102,14 @@ jax.tree_util.register_pytree_node(BlockedACSR, _bacsr_flatten,
 
 
 def block_encode(dense: np.ndarray, block_rows: int = 128,
-                 slot_pad: int = 8) -> BlockedACSR:
+                 slot_pad: int = 8,
+                 value_dtype: str = "f32") -> BlockedACSR:
     """Pack a dense matrix's nonzeros into the balanced slot schedule.
 
     Fully vectorized (bincount + cumsum over the whole matrix — no
     per-block Python loops), so offline compression of real layer shapes
-    is linear in nnz.
+    is linear in nnz.  ``value_dtype="bf16"`` stores the nonzeros in
+    bfloat16 (half the value bytes; the kernel upcasts in VMEM).
     """
     dense = np.asarray(dense)
     assert dense.ndim == 2, "BlockedACSR encodes 2-D matrices"
@@ -129,7 +131,12 @@ def block_encode(dense: np.ndarray, block_rows: int = 128,
     vals[blk, slot, lane] = dense[rows, cols]
     cidx[blk, slot, lane] = cols
     row_nnz = counts.reshape(nblocks, block_rows).astype(np.int32)
-    return BlockedACSR(values=jnp.asarray(vals), col_idx=jnp.asarray(cidx),
+    jvals = jnp.asarray(vals)
+    if value_dtype == "bf16":
+        jvals = jvals.astype(jnp.bfloat16)
+    elif value_dtype != "f32":
+        raise ValueError(f"unknown value_dtype {value_dtype!r}")
+    return BlockedACSR(values=jvals, col_idx=jnp.asarray(cidx),
                        row_nnz=jnp.asarray(row_nnz),
                        shape=(n_rows, n_cols), block_rows=block_rows,
                        nnz=int(nnz))

@@ -92,6 +92,12 @@ def lut_key(n: int, k: int, batch: int, interpret: bool) -> Key:
     return ("codebook4", n, k, batch, "interp" if interpret else "tpu")
 
 
+def paged_key(hkv: int, group: int, d_head: int, page_size: int, npp: int,
+              batch: int, quantized: bool, interpret: bool) -> Key:
+    return ("paged-attn", hkv, group, d_head, page_size, npp, batch,
+            "q8" if quantized else "bf16", "interp" if interpret else "tpu")
+
+
 # ------------------------------------------------------------- candidates
 def acsr_candidates(nblocks: int, k: int) -> List[KernelChoice]:
     mbs = sorted({m for m in (1, 2, 4, 8) if m <= max(1, nblocks)})
@@ -115,6 +121,15 @@ def lut_candidates(n: int, k: int) -> List[KernelChoice]:
     for bm, bn, bk in tiles:
         cands.append(KernelChoice("pallas", (
             ("bm", bm), ("bn", min(bn, n)), ("bk", min(bk, k)))))
+    return cands
+
+
+def paged_candidates(npp: int) -> List[KernelChoice]:
+    """XLA gather reference vs the Pallas kernel at a few page-block
+    widths (pb = table slots folded per grid step)."""
+    cands = [KernelChoice("xla")]
+    for pb in sorted({min(p, npp) for p in (1, 2, 4)}):
+        cands.append(KernelChoice("pallas", (("pb", pb),)))
     return cands
 
 
@@ -235,6 +250,53 @@ def tune_layer(layer, batch: int, interpret: bool) -> Optional[KernelChoice]:
                                  bk=c.tile("bk"), interpret=interpret)
         return autotune(key, lut_candidates(n_out, n_in), run)
     return None
+
+
+def tune_paged(cfg, batch: int, max_len: int, page_size: int,
+               kv_dtype: str, interpret: bool) -> Optional[KernelChoice]:
+    """Search the paged-attention impl/tile space for one serving
+    geometry (cfg attention shape x batch x table width) on a synthetic
+    fully-populated pool — the worst-case gather the decode step runs."""
+    import jax
+    import jax.numpy as jnp
+    from repro import kvstore as kvsto
+
+    hkv, dh = cfg.n_kv, cfg.head_dim
+    group = cfg.n_heads // hkv
+    npp = -(-max_len // page_size)
+    quantized = kv_dtype == "int8"
+    key = paged_key(hkv, group, dh, page_size, npp, batch, quantized,
+                    interpret)
+    if get(key) is not None:
+        return get(key)
+    rng = np.random.default_rng(0)
+    pool = kvsto.init_pool(1 + batch * npp, hkv, page_size, dh,
+                           kv_dtype=kv_dtype)
+    # every table slot owns a page and every slot is written: tune on the
+    # full-occupancy gather, the steady-state cost of a long sequence
+    table = jnp.asarray(
+        1 + np.arange(batch * npp).reshape(batch, npp), jnp.int32)
+    for t in range(max_len):
+        pool = kvsto.update(
+            pool, table,
+            jnp.asarray(rng.normal(size=(batch, hkv, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(batch, hkv, dh)), jnp.float32),
+            jnp.full((batch,), t, jnp.int32))
+    q = jnp.asarray(rng.normal(size=(batch, cfg.n_heads, dh)), jnp.float32)
+    cur = jnp.full((batch,), max_len - 1, jnp.int32)
+    win = jnp.int32(-1)
+    # jit the XLA candidate — inside a decode step it runs XLA-fused
+    xla_run = jax.jit(lambda qq, cc, ww: kvsto.paged_attention_xla(
+        qq, pool, table, cc, ww, scale=cfg.attn_scale,
+        cap=cfg.attn_softcap))
+
+    def run(c):
+        if c.impl == "xla":
+            return xla_run(q, cur, win)
+        return kvsto.paged_attention_pallas(
+            q, pool, table, cur, win, scale=cfg.attn_scale,
+            cap=cfg.attn_softcap, pb=c.tile("pb", 2), interpret=interpret)
+    return autotune(key, paged_candidates(npp), run)
 
 
 def tune_params(params, batch: int, interpret: bool) -> int:

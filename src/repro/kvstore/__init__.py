@@ -1,0 +1,25 @@
+"""Paged, quantized KV-cache subsystem.
+
+A shared page pool (int8 values + per-page scales) with per-sequence page
+tables replaces the dense O(B·S_max) decode cache with an O(used pages)
+one — the AIDA thesis (keep data resident, exploit lower precision)
+applied to attention state.  See pool.py for the memory layout,
+paged_attention.py for the decode kernel, alloc.py for the host-side
+lifecycle, and api/session.py for the continuous-batching integration.
+"""
+from repro.kvstore.alloc import OutOfPages, PageAllocator, reclaimable_prefix
+from repro.kvstore.paged_attention import (paged_attention,
+                                           paged_attention_pallas,
+                                           paged_attention_xla)
+from repro.kvstore.pool import (GARBAGE_PAGE, NO_PAGE, PagedKV,
+                                attention_mask, dense_kv_bytes_per_token,
+                                gather_kv, init_pool, init_table,
+                                kv_bytes_per_token, update)
+
+__all__ = [
+    "GARBAGE_PAGE", "NO_PAGE", "OutOfPages", "PageAllocator", "PagedKV",
+    "attention_mask", "dense_kv_bytes_per_token", "gather_kv", "init_pool",
+    "init_table", "kv_bytes_per_token", "paged_attention",
+    "paged_attention_pallas", "paged_attention_xla", "reclaimable_prefix",
+    "update",
+]

@@ -1,0 +1,242 @@
+"""Paged-attention decode kernel: page-table gather + inline dequant +
+flash-style online softmax, one grid step per block of pages.
+
+The Pallas kernel uses the canonical TPU paged-attention trick: the page
+table rides in as a *scalar-prefetch* argument, so the K/V BlockSpec
+index maps can read it and DMA exactly the pages a sequence owns —
+``index_map=(table[b, i·pb+j], h, 0, 0)`` — no dense [B, S, ...] tensor
+ever exists.  Each grid step covers ``pb`` table slots (pb separate
+BlockSpecs per operand; a tuner-searchable tile), dequantizes them
+against their per-page scales in VMEM, and folds them into the running
+(m, l, acc) online-softmax state; the output block is finalized on the
+last page block, exactly like kernels/flash_attention.py.
+
+The XLA path (`impl="xla"`) is the same math as gather + masked softmax —
+the correctness oracle, the autodiff-free reference, and (on
+interpret-mode hosts) usually the faster choice; `paged_attention()`
+dispatches per the kernels.tune cache like the FC ops do.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kvstore import pool as poolmod
+from repro.kvstore.pool import PagedKV
+
+NEG_INF = -1e30
+
+
+def _softcap(s, cap: Optional[float]):
+    return s if cap is None else cap * jnp.tanh(s / cap)
+
+
+# ------------------------------------------------------------------- xla
+def paged_attention_xla(q: jnp.ndarray, pool: PagedKV, table: jnp.ndarray,
+                        cur_pos: jnp.ndarray, window, *,
+                        scale: Optional[float] = None,
+                        cap: Optional[float] = None) -> jnp.ndarray:
+    """Reference path: q [B, H, Dh] against the paged pool -> [B, H, Dh].
+
+    GQA by grouping query heads (no k/v repeat), masks from table-index
+    positions — mirrors models.attention._core over gathered pages."""
+    b, h, dh = q.shape
+    _, hkv, ps, _ = pool.k_pages.shape
+    g = h // hkv
+    npp = table.shape[1]
+    scale = (dh ** -0.5) if scale is None else scale
+    safe = jnp.maximum(table, poolmod.GARBAGE_PAGE)
+    k = jnp.take(pool.k_pages, safe, axis=0)       # [B, P, Hkv, ps, Dh]
+    v = jnp.take(pool.v_pages, safe, axis=0)
+    # unquantized pages mirror _core's mixed precision (bf16 operands,
+    # f32 accumulate/softmax) so paged bf16 == full cache up to reduction
+    # order; int8 pages contract in f32 (dequant headroom)
+    cdt = jnp.float32 if pool.quantized else k.dtype
+    qg = q.reshape(b, hkv, g, dh).astype(cdt)
+    # page axes stay in the einsum (no transposed [B,Hkv,S,Dh] copy); the
+    # per-page dequant scales fold into the [.., p, c] score/prob tensors
+    # instead of elementwise-dequantizing whole pages (Dh x less work)
+    s = jnp.einsum("bkgd,bpkcd->bkgpc", qg, k.astype(cdt),
+                   preferred_element_type=jnp.float32) * scale
+    if pool.quantized:
+        ks = jnp.take(pool.k_scale, safe, axis=0)  # [B, P, Hkv]
+        s = s * ks.transpose(0, 2, 1)[:, :, None, :, None]
+    s = _softcap(s, cap)
+    mask = poolmod.attention_mask(table, cur_pos,
+                                  jnp.asarray(window, jnp.int32),
+                                  pool.page_size).reshape(b, npp, ps)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s.reshape(b, hkv, g, npp * ps), axis=-1)
+    p = p.reshape(b, hkv, g, npp, ps)
+    if pool.quantized:
+        vs = jnp.take(pool.v_scale, safe, axis=0)
+        p = p * vs.transpose(0, 2, 1)[:, :, None, :, None]
+    o = jnp.einsum("bkgpc,bpkcd->bkgd", p.astype(cdt), v.astype(cdt),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, dh)
+
+
+# ---------------------------------------------------------------- pallas
+def _paged_kernel(table_ref, pos_ref, win_ref, q_ref, *refs,
+                  scale, cap, quantized, pb, ps, nblk):
+    """One grid step = ``pb`` pages of one (sequence, kv-head) folded into
+    the online softmax.  refs order: k_0..k_{pb-1}, v_0..v_{pb-1},
+    [ks_0..ks_{pb-1}, vs_0..vs_{pb-1}], o_ref, m/l/acc scratch."""
+    refs = list(refs)
+    k_refs = [refs.pop(0) for _ in range(pb)]
+    v_refs = [refs.pop(0) for _ in range(pb)]
+    if quantized:
+        ks_refs = [refs.pop(0) for _ in range(pb)]
+        vs_refs = [refs.pop(0) for _ in range(pb)]
+    o_ref, m_scr, l_scr, acc_scr = refs
+    bi, i = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # [G, Dh]
+    cur = pos_ref[bi]
+    win = win_ref[0]
+    ks, vs, masks = [], [], []
+    for j in range(pb):                                    # static unroll
+        t = i * pb + j                                     # table index
+        kj = k_refs[j][0, 0].astype(jnp.float32)           # [ps, Dh]
+        vj = v_refs[j][0, 0].astype(jnp.float32)
+        if quantized:
+            kj = kj * ks_refs[j][0, 0]                     # per-page scale
+            vj = vj * vs_refs[j][0, 0]
+        base = t * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        valid = (table_ref[bi, t] >= 0) & (base <= cur)
+        valid &= (win < 0) | (base > cur - win)
+        ks.append(kj)
+        vs.append(vj)
+        masks.append(valid)
+    k = jnp.concatenate(ks, axis=0)                        # [pb*ps, Dh]
+    v = jnp.concatenate(vs, axis=0)
+    mask = jnp.concatenate(masks, axis=1)                  # [1, pb*ps]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, cap)
+    s = jnp.where(mask, s, NEG_INF)                        # [G, pb*ps]
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(i == nblk - 1)
+    def _done():
+        o_ref[...] = (acc_scr[...] /
+                      jnp.maximum(l_scr[...], 1e-30))[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "cap", "pb",
+                                             "interpret"))
+def paged_attention_pallas(q, pool: PagedKV, table, cur_pos, window, *,
+                           scale: Optional[float] = None,
+                           cap: Optional[float] = None,
+                           pb: int = 2, interpret: bool = True):
+    """Pallas paged attention. q [B, H, Dh] -> [B, H, Dh] f32."""
+    b, h, dh = q.shape
+    n_pages, hkv, ps, _ = pool.k_pages.shape
+    g = h // hkv
+    npp = table.shape[1]
+    scale = (dh ** -0.5) if scale is None else scale
+    pb = max(1, min(pb, npp))
+    nblk = -(-npp // pb)
+    if nblk * pb != npp:   # pad table; -1 entries are masked in-kernel
+        table = jnp.pad(table, ((0, 0), (0, nblk * pb - npp)),
+                        constant_values=poolmod.NO_PAGE)
+    qg = q.reshape(b, hkv, g, dh)
+    quantized = pool.quantized
+
+    # scalar-prefetch index maps: pick each page straight from the table
+    def page_map(j):
+        return lambda bi, hi, i, tbl, pos, win: (
+            jnp.maximum(tbl[bi, i * pb + j], 0), hi, 0, 0)
+
+    def scale_map(j):
+        return lambda bi, hi, i, tbl, pos, win: (
+            jnp.maximum(tbl[bi, i * pb + j], 0), hi)
+
+    in_specs = [pl.BlockSpec((1, 1, g, dh),
+                             lambda bi, hi, i, tbl, pos, win: (bi, hi, 0, 0))]
+    args = [qg]
+    for j in range(pb):
+        in_specs.append(pl.BlockSpec((1, 1, ps, dh), page_map(j)))
+        args.append(pool.k_pages)
+    for j in range(pb):
+        in_specs.append(pl.BlockSpec((1, 1, ps, dh), page_map(j)))
+        args.append(pool.v_pages)
+    if quantized:
+        for j in range(pb):
+            in_specs.append(pl.BlockSpec((1, 1), scale_map(j)))
+            args.append(pool.k_scale)
+        for j in range(pb):
+            in_specs.append(pl.BlockSpec((1, 1), scale_map(j)))
+            args.append(pool.v_scale)
+    kern = functools.partial(_paged_kernel, scale=scale, cap=cap,
+                             quantized=quantized, pb=pb, ps=ps, nblk=nblk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, nblk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, hi, i, tbl, pos, win:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, dh), jnp.float32)],
+    )
+    o = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        interpret=interpret,
+    )(table, jnp.asarray(cur_pos, jnp.int32),
+      jnp.asarray(window, jnp.int32).reshape(1), *args)
+    return o.reshape(b, h, dh)
+
+
+# ------------------------------------------------------------- dispatch
+def paged_attention(q, pool: PagedKV, table, cur_pos, window, *,
+                    scale: Optional[float] = None,
+                    cap: Optional[float] = None,
+                    impl: Optional[str] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Autotuned entry point: Pallas kernel or the XLA gather reference
+    per the kernels.tune winner for this (geometry, batch, backend)."""
+    from repro.kernels import ops as _ops
+    from repro.kernels import tune as _tune
+    interp = _ops.pallas_interpret() if interpret is None else interpret
+    pb = None
+    if impl is None:
+        b, h, dh = q.shape
+        hkv = pool.k_pages.shape[1]
+        choice = _tune.get(_tune.paged_key(
+            hkv, h // hkv, dh, pool.page_size, table.shape[1], b,
+            pool.quantized, interp))
+        if choice is not None:
+            impl = choice.impl
+            pb = choice.tile("pb")
+        else:
+            # untuned default: native kernel on TPU, XLA on interpret hosts
+            impl = "xla" if interp else "pallas"
+    if impl == "xla":
+        return paged_attention_xla(q, pool, table, cur_pos, window,
+                                   scale=scale, cap=cap)
+    return paged_attention_pallas(q, pool, table, cur_pos, window,
+                                  scale=scale, cap=cap,
+                                  pb=pb or 2, interpret=interp)

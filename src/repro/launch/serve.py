@@ -25,6 +25,9 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--kv-cache", default=None,
+                    choices=[None, "full", "paged"],
+                    help="paged = int8 page-pool KV cache (repro.kvstore)")
     args = ap.parse_args()
 
     cfg = get(args.arch) if args.full_size else reduced(get(args.arch))
@@ -42,7 +45,8 @@ def main():
     reqs = [Request(prompt=[1, 2 + rid % 7, 3], rid=rid,
                     max_new=args.max_new) for rid in range(args.requests)]
     t0 = time.perf_counter()
-    results = eng.serve(reqs, batch_slots=args.slots, max_len=128)
+    results = eng.serve(reqs, batch_slots=args.slots, max_len=128,
+                        kv_cache=args.kv_cache)
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.tokens) for r in results)
     print(f"[serve] {len(results)} requests, {n_tok} tokens, "

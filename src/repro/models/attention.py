@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import kvstore as kvs
 from repro.kernels import ops
 from repro.models import kvcache as kvc
 from repro.models.layers import COMPUTE_DTYPE, dense, dense_init, rope, softcap
@@ -148,6 +149,33 @@ def attn_apply(p, x, positions, *, n_heads: int, n_kv: int, d_head: int,
     return dense(_merge_heads(o.astype(COMPUTE_DTYPE)), p["wo"])
 
 
+def decode_attend(cache: kvc.KVCache, q, k, v, cur_pos, *, window,
+                  ring: bool = False, cap: Optional[float] = None,
+                  scale: float = 1.0):
+    """Post-projection decode attention against a dense cache: cache
+    update + masked softmax over the slots.  Split out from attn_decode
+    so benchmarks can time the attention/KV term separately from the
+    (compressible) FC projections."""
+    cache = kvc.update(cache, k, v, cur_pos, ring=ring)
+    mask = kvc.attention_mask(cache, cur_pos,
+                              jnp.asarray(window, jnp.int32))  # [B, S]
+    o = _core(q, cache.k, cache.v, mask[:, None, None, :], cap, scale)
+    return cache, o
+
+
+def decode_attend_paged(pool: kvs.PagedKV, table, q, k, v, cur_pos, *,
+                        window, cap: Optional[float] = None,
+                        scale: float = 1.0):
+    """Paged counterpart of decode_attend: quantize-into-page update +
+    page-gather attention (q/k/v are [B, H(kv), 1, Dh] as from _qkv)."""
+    pool = kvs.update(pool, table, k[:, :, 0].astype(jnp.float32),
+                      v[:, :, 0].astype(jnp.float32), cur_pos)
+    o = kvs.paged_attention(q[:, :, 0], pool, table, cur_pos,
+                            jnp.asarray(window, jnp.int32),
+                            scale=scale, cap=cap)
+    return pool, o[:, :, None, :]
+
+
 def attn_decode(p, cache: kvc.KVCache, x, cur_pos, *, n_heads: int,
                 n_kv: int, d_head: int, window, ring: bool = False,
                 cap: Optional[float] = None,
@@ -156,8 +184,25 @@ def attn_decode(p, cache: kvc.KVCache, x, cur_pos, *, n_heads: int,
     """One-token decode. x [B,1,D], cur_pos [B] absolute position."""
     scale = (d_head ** -0.5) if scale is None else scale
     q, k, v = _qkv(p, x, n_heads, n_kv, d_head, cur_pos[:, None], theta)
-    cache = kvc.update(cache, k, v, cur_pos, ring=ring)
-    mask = kvc.attention_mask(cache, cur_pos,
-                              jnp.asarray(window, jnp.int32))  # [B, S]
-    o = _core(q, cache.k, cache.v, mask[:, None, None, :], cap, scale)
+    cache, o = decode_attend(cache, q, k, v, cur_pos, window=window,
+                             ring=ring, cap=cap, scale=scale)
     return cache, dense(_merge_heads(o.astype(COMPUTE_DTYPE)), p["wo"])
+
+
+def attn_decode_paged(p, pool: kvs.PagedKV, table, x, cur_pos, *,
+                      n_heads: int, n_kv: int, d_head: int, window,
+                      cap: Optional[float] = None,
+                      theta: Optional[float] = 10000.0,
+                      scale: Optional[float] = None):
+    """One-token decode against the paged KV pool (cache="paged" route).
+
+    The current token's k/v are quantized into their page first, then the
+    paged-attention kernel attends over the sequence's page table — same
+    write-then-attend semantics as attn_decode, O(used pages) memory.
+    Windowing is mask-only here; page reclamation behind an SWA window is
+    the Session's host-side job (kvstore.reclaimable_prefix)."""
+    scale = (d_head ** -0.5) if scale is None else scale
+    q, k, v = _qkv(p, x, n_heads, n_kv, d_head, cur_pos[:, None], theta)
+    pool, o = decode_attend_paged(pool, table, q, k, v, cur_pos,
+                                  window=window, cap=cap, scale=scale)
+    return pool, dense(_merge_heads(o.astype(COMPUTE_DTYPE)), p["wo"])

@@ -9,10 +9,17 @@ position deltas).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import os
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+#: update strategy, resolved ONCE at import — update() runs inside traced
+#: decode steps, where a per-call os.environ read is pure host overhead
+#: (and useless: the trace bakes in whatever value the first call saw).
+#: Override per call with update(..., strategy=...).
+KV_UPDATE_DEFAULT = os.environ.get("REPRO_KV_UPDATE", "scatter")
 
 
 class KVCache(NamedTuple):
@@ -33,10 +40,12 @@ def init_cache(batch: int, n_kv: int, slots: int, d_head: int,
 
 
 def update(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
-           cur_pos: jnp.ndarray, ring: bool = False) -> KVCache:
+           cur_pos: jnp.ndarray, ring: bool = False,
+           strategy: Optional[str] = None) -> KVCache:
     """Insert one token's k/v ([B, Hkv, 1, Dh]) at absolute pos [B].
 
-    Two strategies (§Perf-measured, REPRO_KV_UPDATE=scatter|select):
+    Two strategies (§Perf-measured; default from REPRO_KV_UPDATE at
+    import, explicit ``strategy=`` wins):
     * scatter (default) — in-place batched dynamic update; cheapest when
       GSPMD shards it (llama3 decode: 148 ms vs 211 ms memory term);
     * select — one-hot jnp.where; full-cache rewrite, but immune to the
@@ -44,10 +53,10 @@ def update(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
       scatters trigger on some sharded layouts (gemma2/hymba local+global
       stacks).
     """
-    import os
+    strategy = KV_UPDATE_DEFAULT if strategy is None else strategy
     slots = cache.k.shape[2]
     slot = (cur_pos % slots) if ring else cur_pos
-    if os.environ.get("REPRO_KV_UPDATE", "scatter") == "select":
+    if strategy == "select":
         hot = (jax.lax.broadcasted_iota(
             jnp.int32, (cache.k.shape[0], slots), 1) == slot[:, None])
         hot_kv = hot[:, None, :, None]                     # [B,1,S,1]

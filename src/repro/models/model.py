@@ -243,7 +243,26 @@ def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict, *,
 
 
 # ---------------------------------------------------------------- decode
-def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      kv_cache: str = "full", page_size: int = 16,
+                      kv_pool_pages: Optional[int] = None,
+                      kv_dtype: str = "int8") -> Dict:
+    """Decode state.  kv_cache="paged" swaps the dense per-slot KV cache
+    for the kvstore page pool + a shared per-sequence page table (the
+    table lives at the top level: one table drives every layer's pool)."""
+    if kv_cache == "paged":
+        if cfg.family == "rwkv6":
+            raise ValueError("paged KV cache needs attention layers; "
+                             f"{cfg.name} is attention-free")
+        layers = tfm.init_stack_state(cfg, batch, max_len,
+                                      kv_cache="paged",
+                                      page_size=page_size,
+                                      kv_pool_pages=kv_pool_pages,
+                                      kv_dtype=kv_dtype)
+        from repro import kvstore as kvs
+        return {"layers": layers,
+                "pos": jnp.zeros((batch,), jnp.int32),
+                "page_table": kvs.init_table(batch, max_len, page_size)}
     return {"layers": tfm.init_stack_state(cfg, batch, max_len),
             "pos": jnp.zeros((batch,), jnp.int32)}
 
@@ -255,28 +274,50 @@ def decode_step(cfg: ArchConfig, params: Dict, state: Dict,
     x = embed(tokens[:, None], params["embed"])
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, COMPUTE_DTYPE)
+    table = state.get("page_table")        # paged route (static branch)
     new_layers, x = tfm.stack_decode(cfg, params["layers"], state["layers"],
-                                     x, state["pos"], unroll=unroll)
+                                     x, state["pos"], unroll=unroll,
+                                     page_table=table)
     x = _norm(cfg)(x, params["final_norm"])
     if cfg.tie_embeddings:
         logits = unembed(x, params["embed"])
     else:
         logits = jnp.matmul(x, params["lm_head"].astype(COMPUTE_DTYPE),
                             preferred_element_type=jnp.float32)
+    new_state = {"layers": new_layers, "pos": state["pos"] + 1}
+    if table is not None:
+        new_state["page_table"] = table
     logits = softcap(logits, cfg.final_softcap)
-    return ({"layers": new_layers, "pos": state["pos"] + 1},
-            logits[:, 0, :])
+    return new_state, logits[:, 0, :]
 
 
 def state_specs(cfg: ArchConfig, batch: int, dp_ok: bool,
-                dpax: Tuple[str, ...] = ("data",)) -> Dict:
+                dpax: Tuple[str, ...] = ("data",),
+                kv_cache: str = "full", kv_dtype: str = "int8") -> Dict:
     """PartitionSpecs for the decode state (stacked over layers).
 
     dp_ok: batch divisible by the dp submesh — else batch replicates and the
     cache sequence dim shards over ("data","model") (batch-1 long-context).
+    kv_dtype matters for treedef parity: bf16 pools carry None scale
+    leaves, so their specs must too.
     """
     bdim = dpax if dp_ok else None
     seq = "model" if dp_ok else ("data", "model")
+    if kv_cache == "paged":
+        from repro.kvstore import PagedKV
+        # pages replicate over data (any sequence may own any page);
+        # kv heads shard over model like the dense cache's head dim
+        scale_sp = P(None, None, "model") if kv_dtype == "int8" else None
+        layers = {"kv": PagedKV(
+            k_pages=P(None, None, "model", None, None),
+            v_pages=P(None, None, "model", None, None),
+            k_scale=scale_sp,
+            v_scale=scale_sp)}
+        if cfg.family == "hymba":
+            layers["mamba"] = {"conv": P(None, bdim, None, "model"),
+                               "h": P(None, bdim, "model", None)}
+        return {"layers": layers, "pos": P(bdim),
+                "page_table": P(bdim, None)}
     if cfg.family == "rwkv6":
         layers = {"tm_prev": P(None, bdim, "model"),
                   "cm_prev": P(None, bdim, "model"),

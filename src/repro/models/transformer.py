@@ -13,6 +13,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import kvstore as kvs
 from repro.configs.base import ArchConfig
 from repro.models import attention as attn
 from repro.models import kvcache as kvc
@@ -137,7 +138,10 @@ def _any_global(cfg: ArchConfig) -> bool:
     return any(w < 0 for w in cfg.layer_windows())
 
 
-def init_layer_state(cfg: ArchConfig, batch: int, slots_full: int) -> Dict:
+def init_layer_state(cfg: ArchConfig, batch: int, slots_full: int,
+                     kv_cache: str = "full", page_size: int = 16,
+                     kv_pool_pages: Optional[int] = None,
+                     kv_dtype: str = "int8") -> Dict:
     """Per-layer decode state template (one layer; caller stacks L)."""
     if cfg.family == "rwkv6":
         h = cfg.d_model // cfg.rwkv_head_dim
@@ -146,11 +150,21 @@ def init_layer_state(cfg: ArchConfig, batch: int, slots_full: int) -> Dict:
                 "S": jnp.zeros((batch, h, cfg.rwkv_head_dim,
                                 cfg.rwkv_head_dim), jnp.float32)}
     st = {}
-    # local layers ring-cache `window` slots; global layers need slots_full.
-    # scan homogeneity: all layers share the max slot count, rings mask.
-    slots = slots_full if _any_global(cfg) \
-        else min(cfg.window, slots_full)
-    st["kv"] = kvc.init_cache(batch, cfg.n_kv, slots, cfg.head_dim)
+    if kv_cache == "paged":
+        # O(used pages): every layer owns pool arrays of the same shape,
+        # all indexed through the one shared per-sequence page table
+        npp = -(-slots_full // page_size)
+        n_pages = (1 + batch * npp if kv_pool_pages is None
+                   else kv_pool_pages)
+        st["kv"] = kvs.init_pool(n_pages, cfg.n_kv, page_size,
+                                 cfg.head_dim, kv_dtype=kv_dtype)
+    else:
+        # local layers ring-cache `window` slots; global layers need
+        # slots_full.  scan homogeneity: all layers share the max slot
+        # count, rings mask.
+        slots = slots_full if _any_global(cfg) \
+            else min(cfg.window, slots_full)
+        st["kv"] = kvc.init_cache(batch, cfg.n_kv, slots, cfg.head_dim)
     if cfg.family == "hymba":
         st["mamba"] = {"conv": jnp.zeros((batch, 3, cfg.d_model),
                                          jnp.float32),
@@ -159,14 +173,16 @@ def init_layer_state(cfg: ArchConfig, batch: int, slots_full: int) -> Dict:
     return st
 
 
-def init_stack_state(cfg: ArchConfig, batch: int, slots_full: int):
-    one = init_layer_state(cfg, batch, slots_full)
+def init_stack_state(cfg: ArchConfig, batch: int, slots_full: int,
+                     **kv_kw):
+    one = init_layer_state(cfg, batch, slots_full, **kv_kw)
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape),
         one)
 
 
-def block_decode(cfg: ArchConfig, p: Dict, st: Dict, x, cur_pos, window):
+def block_decode(cfg: ArchConfig, p: Dict, st: Dict, x, cur_pos, window,
+                 page_table=None):
     """One layer, one token. x [B,1,D]."""
     nrm = _norm(cfg)
     if cfg.family == "rwkv6":
@@ -180,10 +196,16 @@ def block_decode(cfg: ArchConfig, p: Dict, st: Dict, x, cur_pos, window):
         return {"tm_prev": tm_st["prev"], "cm_prev": cm_prev,
                 "S": tm_st["S"]}, x + h
 
-    cache, h = attn.attn_decode(p["attn"], st["kv"], nrm(x, p["ln1"]),
-                                cur_pos, window=window,
-                                ring=not _any_global(cfg),
-                                **_attn_kwargs(cfg))
+    if page_table is not None:
+        cache, h = attn.attn_decode_paged(p["attn"], st["kv"], page_table,
+                                          nrm(x, p["ln1"]), cur_pos,
+                                          window=window,
+                                          **_attn_kwargs(cfg))
+    else:
+        cache, h = attn.attn_decode(p["attn"], st["kv"], nrm(x, p["ln1"]),
+                                    cur_pos, window=window,
+                                    ring=not _any_global(cfg),
+                                    **_attn_kwargs(cfg))
     new_st = dict(st)
     new_st["kv"] = cache
     if cfg.family == "hymba":
@@ -207,12 +229,13 @@ def block_decode(cfg: ArchConfig, p: Dict, st: Dict, x, cur_pos, window):
 
 
 def stack_decode(cfg: ArchConfig, stacked: Dict, states, x, cur_pos,
-                 unroll: bool = False):
+                 unroll: bool = False, page_table=None):
     windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
 
     def body(xc, inp):
         p, st, win = inp
-        new_st, xo = block_decode(cfg, p, st, xc, cur_pos, win)
+        new_st, xo = block_decode(cfg, p, st, xc, cur_pos, win,
+                                  page_table=page_table)
         return xo, new_st
 
     x, new_states = jax.lax.scan(body, x, (stacked, states, windows),
