@@ -22,6 +22,16 @@ The paged-KV section ("kv") is gated too:
     passes within tol of 1.0 or of the baseline's ratio;
   * the attention/FC time-share fields must be present and sane —
     they are the trajectory signal the next attention PR builds on.
+
+And the scheduler section ("serving"):
+  * chunked prefill must reach the first token within its call bound
+    (ceil(prompt/chunk)+1 — deterministic step counts, no wall clock);
+  * the shared-prefix workload must actually hit the prefix cache, and
+    every drain must end with zero leaked pages (deterministic);
+  * the pressure workload must complete through preemption, not crash;
+  * heterogeneous-workload throughput gates like the FC modes: within
+    tol of the baseline in absolute tok/s OR normalized by the same
+    run's dense-mode tok/s (host speed cancels in the second unit).
 """
 from __future__ import annotations
 
@@ -70,6 +80,7 @@ def check(new: dict, base: dict, tol: float, log=print) -> bool:
         log("  emulator/cycle-sim agreement LOST")
         ok = False
     ok &= check_kv(new, base, tol, log=log)
+    ok &= check_serving(new, base, tol, log=log)
     return ok
 
 
@@ -103,6 +114,72 @@ def check_kv(new: dict, base: dict, tol: float, log=print) -> bool:
         log(f"  kv         paged/full x{ratio:.2f}  "
             f"bytes/token x{bytes_ratio:.2f}  attn share "
             f"{share.get('full'):.0%} -> {share.get('paged'):.0%}  OK")
+    return ok
+
+
+def check_serving(new: dict, base: dict, tol: float, log=print) -> bool:
+    sv = new.get("serving")
+    if sv is None:
+        log("  serving section MISSING from new run")
+        return False
+    ok = True
+    # chunked prefill: deterministic call counts
+    pf = sv.get("prefill", {})
+    calls = pf.get("chunked", {}).get("first_token_calls")
+    one = pf.get("one_token", {}).get("first_token_calls")
+    bound = pf.get("bound_calls")
+    if calls is None or bound is None or calls > bound:
+        log(f"  serving prefill first-token calls {calls} exceed bound "
+            f"{bound} — chunked prefill lost its latency win")
+        ok = False
+    if one is not None and calls is not None and calls >= one:
+        log(f"  serving chunked prefill ({calls} calls) no better than "
+            f"one-token ({one})")
+        ok = False
+    # prefix cache: must hit, must not leak (deterministic)
+    px = sv.get("prefix", {})
+    if not px.get("page_hits"):
+        log(f"  serving prefix-cache hits {px.get('page_hits')} — shared "
+            "prefixes are being re-prefilled")
+        ok = False
+    leaks = (px.get("pages_leaked"), px.get("pages_leaked_after_clear"),
+             sv.get("preemption", {}).get("pages_leaked"))
+    if any(lk is None or lk != 0 for lk in leaks):
+        log(f"  serving leaked pages at drain: {leaks} (prefix, "
+            "prefix-after-clear, preemption) — refcount bug")
+        ok = False
+    # preemption: the over-committed workload completes
+    pre = sv.get("preemption", {})
+    if pre.get("completed") != pre.get("requests") \
+            or not pre.get("preemptions"):
+        log(f"  serving preemption: {pre.get('completed')}/"
+            f"{pre.get('requests')} completed with "
+            f"{pre.get('preemptions')} preemptions — pressure workload "
+            "must finish via eviction, not crash")
+        ok = False
+    # throughput: dual-unit gate vs baseline (like the FC modes)
+    tok = sv.get("throughput", {}).get("tok_per_s")
+    btok = base.get("serving", {}).get("throughput", {}).get("tok_per_s")
+    dense = new.get("modes", {}).get("dense", {}).get("tok_per_s")
+    bdense = base.get("modes", {}).get("dense", {}).get("tok_per_s")
+    if tok is None:
+        log("  serving throughput missing")
+        ok = False
+    elif btok:
+        abs_ok = tok >= btok * (1.0 - tol)
+        rel_ok = (dense and bdense
+                  and tok / dense >= (btok / bdense) * (1.0 - tol))
+        if not (abs_ok or rel_ok):
+            log(f"  serving throughput REGRESSION {btok:.1f} -> "
+                f"{tok:.1f} tok/s (normalized "
+                f"{btok / bdense if bdense else 0:.3f} -> "
+                f"{tok / dense if dense else 0:.3f} x dense)")
+            ok = False
+    if ok:
+        log(f"  serving    prefill {calls}<={bound} calls  "
+            f"prefix hits {px.get('page_hits')}  "
+            f"preemptions {pre.get('preemptions')}  "
+            f"{tok:.1f} tok/s  OK")
     return ok
 
 

@@ -52,6 +52,22 @@ def bench_api(out_path: str = "BENCH_api.json") -> dict:
               f"full {share['full']:.0%} / paged {share['paged']:.0%}; "
               f"KV {bpt['paged_int8']:.0f} vs {bpt['dense_bf16']:.0f} "
               f"B/token ({bpt['ratio']:.2f}x)")
+    sv = data.get("serving")
+    if sv:
+        pf, th = sv["prefill"], sv["throughput"]
+        print(f"  serving[{sv['mode']}] prefill {pf['prompt_len']} toks: "
+              f"{pf['chunked']['first_token_calls']} calls (chunk "
+              f"{sv['chunk']}) vs {pf['one_token']['first_token_calls']} "
+              f"one-token (bound {pf['bound_calls']}); "
+              f"hetero {th['tok_per_s']:.1f} tok/s, "
+              f"goodput {th['goodput_req_per_s']:.2f} req/s, "
+              f"TTFT p50 {th['ttft_s']['p50']*1e3:.0f} ms")
+        print(f"  serving prefix-cache: {sv['prefix']['page_hits']} page "
+              f"hits / {sv['prefix']['cache']['inserted']} cached; "
+              f"preemption: {sv['preemption']['preemptions']} evictions, "
+              f"{sv['preemption']['completed']}/"
+              f"{sv['preemption']['requests']} completed, "
+              f"{sv['preemption']['pages_leaked']} pages leaked")
     sim = data["backends"]["cycle-sim"]
     print(f"  ap-emulator FC cycles: "
           f"{data['backends']['ap-emulator']['fc_cycles']}  "

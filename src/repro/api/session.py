@@ -1,18 +1,29 @@
-"""Serving session: continuous batching over a fixed-slot decode batch.
+"""Serving session: continuous batching over a fixed-slot decode batch,
+driven by the `repro.sched` scheduler subsystem.
 
-Requests occupy slots, finished slots are refilled from the queue without
-stopping the batch (continuous batching).  Prefill is chunk-free
-(token-by-token through the decode path) to keep one compiled step;
-prompts for a slot are fed before its generation starts.  Greedy or
-temperature sampling.
+Requests occupy slots, finished slots are refilled from the scheduler's
+queue without stopping the batch (continuous batching).  The scheduler
+(`repro.sched.Scheduler`) decides admission order (FIFO or
+shortest-prompt-first), applies page-pool admission control (a request is
+admitted only when its worst-case page need fits), and picks preemption
+victims under pool pressure (youngest first, recompute-style resume)
+instead of letting `OutOfPages` crash the batch.
 
-With ``kv_cache="paged"`` (or REPRO_KV_CACHE=paged) the session swaps the
-dense per-slot KV cache for the kvstore page pool: pages are allocated
-host-side the step a sequence crosses a page boundary, freed the moment
-its request completes (not lazily on refill), and — on pure-SWA
-architectures — reclaimed as soon as they slide fully behind the
-attention window, so resident KV memory tracks *live* tokens, not
-batch·max_len.
+Prefill is chunked when the KV cache is paged and the arch supports it
+(`scheduler=...` with ``chunk=C``): C prompt tokens per model call via
+`sched.prefill`, written straight into pool pages — first-token latency
+drops from prompt_len calls to ceil(prompt_len/C).  With ``chunk=1``
+(default) prompts feed token-by-token through the decode step.
+
+KV cache resolution: ``kv_cache=None`` resolves through REPRO_KV_CACHE
+(default "auto"); "auto" picks the paged pool for every arch with
+attention layers and falls back to the dense cache for attention-free
+ones (rwkv6).  Paged pages are allocated host-side the step a sequence
+crosses a page boundary, freed the moment its request completes, and —
+on pure-SWA architectures — reclaimed as soon as they slide fully behind
+the attention window.  With ``prefix_cache=True`` full prompt pages are
+content-hashed and shared across requests (refcounted), so common
+prompt heads are prefilled once.
 
 Sessions are created by `repro.api.Engine.session()` (or directly); the
 compiled decode step comes from the engine's backend, so dense and
@@ -23,20 +34,35 @@ from __future__ import annotations
 import collections
 import dataclasses
 import os
-from typing import Deque, List, Optional
+import time
+import warnings
+from typing import Deque, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import kvstore as kvs
+from repro import sched as schd
 from repro.api.registry import Executor, get_backend
 from repro.configs.base import ArchConfig
 
 # env knobs resolved ONCE at import (traced code must not read os.environ);
-# per-session override via the kv_cache= / kv_dtype= constructor args
-KV_CACHE_DEFAULT = os.environ.get("REPRO_KV_CACHE", "full")
-KV_DTYPE_DEFAULT = os.environ.get("REPRO_KV_DTYPE", "int8")
+# per-session override via the kv_cache= / kv_dtype= constructor args.
+# "auto" resolves per-arch in resolve_kv_cache: paged for attention archs
+# (exact bf16 pages by default — int8 is the opt-in memory lever).
+KV_CACHE_DEFAULT = os.environ.get("REPRO_KV_CACHE", "auto")
+KV_DTYPE_DEFAULT = os.environ.get("REPRO_KV_DTYPE", "bf16")
+
+
+def resolve_kv_cache(kv_cache: Optional[str], cfg: ArchConfig) -> str:
+    """None -> env default; "auto" -> paged wherever there is attention
+    state to page (explicit "full" always available)."""
+    kv = KV_CACHE_DEFAULT if kv_cache is None else kv_cache
+    if kv == "auto":
+        kv = "full" if cfg.family == "rwkv6" else "paged"
+    return kv
+
 
 # Compiled decode steps keyed by (backend, cfg): sessions on the same
 # config reuse one jitted step (its trace cache handles dense vs
@@ -71,18 +97,25 @@ class Session:
                  backend: Optional[Executor] = None,
                  kv_cache: Optional[str] = None, page_size: int = 16,
                  kv_pool_pages: Optional[int] = None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 scheduler=None):
         assert cfg.has_decode, "encoder archs don't serve autoregressively"
         from repro.models import model as M
         self.cfg, self.params = cfg, params
         self.slots = batch_slots
         self.max_len = max_len
-        kv_cache = KV_CACHE_DEFAULT if kv_cache is None else kv_cache
+        kv_cache = resolve_kv_cache(kv_cache, cfg)
         if cfg.family == "rwkv6":
             kv_cache = "full"      # attention-free: nothing to page
         self.kv_cache = kv_cache
         self.page_size = page_size
         self.kv_dtype = kv_dtype or KV_DTYPE_DEFAULT
+        self.sched = schd.Scheduler(schd.SchedConfig.coerce(scheduler))
+        # chunked prefill needs pages to write into and attention-only
+        # token mixing; elsewhere prompts feed token-by-token
+        self.chunk = self.sched.cfg.chunk if (
+            kv_cache == "paged"
+            and schd.supports_chunked_prefill(cfg)) else 1
         if kv_cache == "paged":
             self.state = M.init_decode_state(
                 cfg, batch_slots, max_len, kv_cache="paged",
@@ -103,48 +136,201 @@ class Session:
             # path's ring-vs-full split)
             self._swa_window = max(wins) if wins and all(
                 w > 0 for w in wins) else None
+            self.prefix = schd.PrefixCache() \
+                if self.sched.cfg.prefix_cache else None
         else:
             self.state = M.init_decode_state(cfg, batch_slots, max_len)
             self.alloc = None
+            self.prefix = None
         self.key = jax.random.PRNGKey(seed)
         if backend is None or isinstance(backend, str):
             backend = get_backend(backend or "jax-dense")
         self.backend = backend
         self._step = _jitted_step(backend, cfg)
+        self._prefill = schd.make_prefill_step(cfg, self.chunk) \
+            if self.chunk > 1 else None
         # per-slot bookkeeping (host side)
-        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_entry: List[Optional[schd.SchedEntry]] = \
+            [None] * batch_slots
         self.slot_pending: List[List[int]] = [[] for _ in range(batch_slots)]
         self.slot_out: List[List[int]] = [[] for _ in range(batch_slots)]
-        self.queue: Deque[Request] = collections.deque()
+        self.slot_cache_j: List[int] = [0] * batch_slots
         self.results: List[Result] = []
-        self.stats = {"steps": 0, "fills": 0}
+        self.records: List[dict] = []
+        self.stats = {"steps": 0, "fills": 0, "preemptions": 0,
+                      "chunk": self.chunk}
         if kv_cache == "paged":
             self.stats.update({"page_allocs": 0, "pages_in_use": 0,
-                               "pages_peak": 0, "pages_reclaimed_swa": 0})
+                               "pages_peak": 0, "pages_reclaimed_swa": 0,
+                               "prefix_hits": 0, "prefix_pages_reused": 0})
 
     # ------------------------------------------------------------ public
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        entry = self.sched.submit(req, step=self.stats["steps"],
+                                  now=time.perf_counter())
+        if self.kv_cache == "paged":
+            entry.hashes = schd.page_hashes(req.prompt, self.page_size)
+        rec = {"rid": req.rid, "prompt_len": len(req.prompt),
+               "max_new": req.max_new, "submit_step": entry.submit_step,
+               "submit_time": entry.submit_time, "admit_step": None,
+               "admit_time": None, "first_token_step": None,
+               "first_token_time": None, "finish_time": None,
+               "n_generated": 0, "preemptions": 0, "prefix_pages": 0}
+        entry.record = rec
+        self.records.append(rec)
 
-    def run(self, max_steps: int = 10_000) -> List[Result]:
-        """Drain the queue; returns all results in deterministic rid order."""
+    def run(self, max_steps: int = 10_000,
+            on_incomplete: str = "raise") -> List[Result]:
+        """Drain the queue; returns all results in deterministic rid
+        order.  ``on_incomplete``: what to do when ``max_steps`` is
+        exhausted (or admission deadlocks) with requests still queued or
+        in flight — "raise" (default), "warn" (report partial results),
+        or "ignore"."""
+        return self.run_workload([], max_steps=max_steps,
+                                 on_incomplete=on_incomplete)
+
+    def run_workload(self, arrivals: Sequence[Tuple[int, Request]],
+                     max_steps: int = 10_000,
+                     on_incomplete: str = "raise") -> List[Result]:
+        """Serve timed traffic: ``arrivals`` is [(arrival_step, Request)]
+        (see sched.workload); requests already submit()ed count as
+        step-0 arrivals.  Idle gaps fast-forward the step clock."""
+        pending: Deque[Tuple[int, Request]] = collections.deque(
+            sorted(arrivals, key=lambda a: a[0]))
+        # the arrival clock mirrors the model-call count but can jump
+        # forward over idle gaps; stats["steps"] stays honest (executed
+        # model calls only)
+        clock = self.stats["steps"]
         for _ in range(max_steps):
+            while pending and pending[0][0] <= clock:
+                self.submit(pending.popleft()[1])
             self._fill_slots()
-            if all(r is None for r in self.slot_req):
+            if all(e is None for e in self.slot_entry):
+                if len(self.sched):
+                    self._incomplete(on_incomplete, blocked=True,
+                                     pending=pending)
+                    break
+                if pending:        # idle until the next arrival
+                    clock = pending[0][0]
+                    continue
                 break
             self._advance()
+            clock += 1
+        else:
+            self._incomplete(on_incomplete, blocked=False, pending=pending)
         return sorted(self.results, key=lambda r: r.rid)
 
     # ----------------------------------------------------------- internals
+    def _incomplete(self, on_incomplete: str, blocked: bool,
+                    pending: Sequence[Tuple[int, Request]] = ()) -> None:
+        unfinished = [e.req.rid for e in self.slot_entry if e is not None]
+        unfinished += [e.req.rid for e in self.sched.queue]
+        unfinished += [req.rid for _, req in pending]  # never submitted
+        if not unfinished or on_incomplete == "ignore":
+            return
+        why = ("admission blocked (page pool too small for the "
+               "head-of-line request's worst-case need)" if blocked
+               else "max_steps exhausted")
+        msg = (f"Session.run stopped with {len(unfinished)} unfinished "
+               f"request(s) {sorted(unfinished)}: {why}; "
+               f"{len(self.results)} completed")
+        if on_incomplete == "warn":
+            warnings.warn(msg, RuntimeWarning, stacklevel=3)
+            return
+        raise kvs.OutOfPages(msg) if blocked else RuntimeError(msg)
+
+    def _page_need(self, entry: schd.SchedEntry) -> int:
+        req = entry.req
+        return schd.scheduler.page_need(
+            len(req.prompt) + len(entry.out), req.max_new - len(entry.out),
+            self.max_len, self.page_size)
+
+    def _prefix_hit_pids(self, entry: schd.SchedEntry) -> List[int]:
+        """Page ids of the leading full prompt pages this entry could
+        attach from the prefix cache right now (pure lookup, no refs)."""
+        if self.prefix is None:
+            return []
+        n = schd.prefix.usable_prefix_pages(len(entry.req.prompt),
+                                            self.page_size)
+        pids: List[int] = []
+        for j in range(min(n, self.host_table.shape[1])):
+            pid = self.prefix.peek(entry.hashes[j])
+            if pid is None:
+                break
+            pids.append(pid)
+        return pids
+
+    def _fits(self, entry: schd.SchedEntry) -> bool:
+        if self.kv_cache != "paged":
+            return True            # dense cache: slots are pre-allocated
+        hits = self._prefix_hit_pids(entry)
+        avail = self.alloc.available
+        if self.prefix is not None:
+            # cache pins can be released under pressure; count the pages
+            # only the cache still holds as effectively available — but
+            # NOT the pages this entry would itself attach (releasing
+            # those frees nothing once the slot holds a ref)
+            avail += self.prefix.releasable(self.alloc, exclude=hits)
+        return self._page_need(entry) - len(hits) <= avail
+
     def _fill_slots(self):
         for i in range(self.slots):
-            if self.slot_req[i] is None and self.queue:
-                req = self.queue.popleft()
-                self.slot_req[i] = req
-                self.slot_pending[i] = list(req.prompt)
-                self.slot_out[i] = []
-                self._reset_slot_state(i)
-                self.stats["fills"] += 1
+            if self.slot_entry[i] is not None:
+                continue
+            entry = self.sched.next_entry(self._fits)
+            if entry is None:
+                break
+            self._admit(i, entry)
+
+    def _admit(self, i: int, entry: schd.SchedEntry):
+        req = entry.req
+        now = time.perf_counter()
+        rec = entry.record
+        if rec["admit_step"] is None:
+            rec["admit_step"] = self.stats["steps"]
+            rec["admit_time"] = now
+        self.slot_entry[i] = entry
+        # recompute resume: a preempted request re-prefills its prompt
+        # PLUS its generated-so-far tokens, then continues sampling
+        self.slot_pending[i] = list(req.prompt) + list(entry.out)
+        self.slot_out[i] = list(entry.out)
+        self._reset_slot_state(i)
+        self.stats["fills"] += 1
+        if self.kv_cache != "paged":
+            return
+        self.slot_cache_j[i] = 0
+        if self.prefix is not None:
+            self._attach_prefix(i, entry)
+
+    def _attach_prefix(self, i: int, entry: schd.SchedEntry):
+        """Reuse cached prefix pages: attach their ids into this slot's
+        table rows and skip the covered prompt tokens."""
+        n = schd.prefix.usable_prefix_pages(len(entry.req.prompt),
+                                            self.page_size)
+        attached: List[Tuple[int, int]] = []           # (table_j, pid)
+        for j in range(min(n, self.host_table.shape[1])):
+            pid = self.prefix.lookup(entry.hashes[j])
+            if pid is None:
+                break
+            self.alloc.ref(pid)
+            self.host_table[i, j] = pid
+            attached.append((j, pid))
+        if not attached:
+            return
+        pj = jnp.asarray([a[0] for a in attached], jnp.int32)
+        pids = jnp.asarray([a[1] for a in attached], jnp.int32)
+        self.state["page_table"] = \
+            self.state["page_table"].at[i, pj].set(pids)
+        skip = len(attached) * self.page_size
+        self.slot_pending[i] = self.slot_pending[i][skip:]
+        self.slot_pos[i] = skip
+        self.state["pos"] = self.state["pos"].at[i].set(skip)
+        self.slot_cache_j[i] = len(attached)
+        entry.prefix_pages += len(attached)
+        entry.record["prefix_pages"] += len(attached)
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_pages_reused"] += len(attached)
+        self.stats["pages_in_use"] = self.alloc.in_use
 
     def _reset_slot_state(self, i: int):
         def zero_slot(x):
@@ -179,7 +365,8 @@ class Session:
 
     # ------------------------------------------------------ paged KV admin
     def _release_slot_pages(self, i: int) -> None:
-        """Free every page owned by slot ``i`` (request done / slot reset)."""
+        """Free every page owned by slot ``i`` (request done / slot reset /
+        preemption).  Shared prefix pages just lose this slot's ref."""
         pages = [int(p) for p in self.host_table[i] if p >= 0]
         if not pages:
             return
@@ -189,22 +376,38 @@ class Session:
             jnp.int32(kvs.NO_PAGE))
         self.stats["pages_in_use"] = self.alloc.in_use
 
-    def _ensure_pages(self) -> None:
+    def _preempt_slot(self, i: int) -> None:
+        """Evict slot ``i`` back to the queue front: pages freed now,
+        tokens regenerated on re-admission (recompute resume)."""
+        entry = self.slot_entry[i]
+        entry.out = list(self.slot_out[i])
+        entry.record["preemptions"] += 1
+        self._release_slot_pages(i)
+        self.slot_entry[i] = None
+        self.slot_pending[i] = []
+        self.slot_out[i] = []
+        self.sched.requeue(entry)
+        self.stats["preemptions"] += 1
+
+    def _ensure_pages(self, counts: List[int]) -> None:
         """Host-side page faults: before a step, make sure each active
-        slot owns the page its next token lands in; fresh pages get their
-        quantization scales cleared so stale maxima can't poison them."""
+        slot owns every page its next ``counts[i]`` tokens land in; fresh
+        pages get their quantization scales cleared so stale maxima can't
+        poison them."""
         npp = self.host_table.shape[1]
         events = []
         try:
-            for i, req in enumerate(self.slot_req):
-                if req is None:
+            for i, entry in enumerate(self.slot_entry):
+                if entry is None or counts[i] == 0:
                     continue
-                pi = self.slot_pos[i] // self.page_size
-                if pi >= npp or self.host_table[i, pi] >= 0:
-                    continue  # beyond max_len (clamped, like dense cache)
-                pid = self.alloc.alloc()
-                self.host_table[i, pi] = pid
-                events.append((i, pi, pid))
+                lo = self.slot_pos[i] // self.page_size
+                hi = (self.slot_pos[i] + counts[i] - 1) // self.page_size
+                for pi in range(lo, min(hi, npp - 1) + 1):
+                    if pi >= npp or self.host_table[i, pi] >= 0:
+                        continue   # beyond max_len (clamped) / present
+                    pid = self.alloc.alloc()
+                    self.host_table[i, pi] = pid
+                    events.append((i, pi, pid))
         except kvs.OutOfPages:
             # transactional: roll back this round's host-side grants so a
             # caller that drains requests and retries never sees a page
@@ -230,14 +433,33 @@ class Session:
         self.stats["pages_in_use"] = self.alloc.in_use
         self.stats["pages_peak"] = self.alloc.peak
 
+    def _ensure_pages_or_preempt(self, counts: List[int]) -> None:
+        """Resolve page pressure: allocate; on OutOfPages release prefix
+        pins LRU-first, then preempt the youngest slot, until the
+        remaining batch fits.  The last runner is never preempted — a
+        pool too small for a single request still raises."""
+        while True:
+            try:
+                self._ensure_pages(counts)
+                return
+            except kvs.OutOfPages:
+                if self.prefix is not None \
+                        and self.prefix.release(self.alloc, 1):
+                    continue
+                victim = schd.Scheduler.choose_victim(self.slot_entry)
+                if victim is None:
+                    raise
+                self._preempt_slot(victim)
+                counts[victim] = 0
+
     def _reclaim_swa_pages(self) -> None:
         """On pure-SWA archs, free pages that slid fully behind the widest
         layer window — decode memory stays O(window), page-granular."""
         if self._swa_window is None:
             return
         events = []
-        for i, req in enumerate(self.slot_req):
-            if req is None:
+        for i, entry in enumerate(self.slot_entry):
+            if entry is None:
                 continue
             dead = kvs.reclaimable_prefix(self.slot_pos[i],
                                           self._swa_window, self.page_size)
@@ -256,47 +478,133 @@ class Session:
         self.stats["pages_reclaimed_swa"] += len(events)
         self.stats["pages_in_use"] = self.alloc.in_use
 
-    def _advance(self):
-        tokens = np.zeros((self.slots,), np.int32)
-        stepped = []
-        for i, req in enumerate(self.slot_req):
-            if req is None:
+    def _insert_prefix_pages(self) -> None:
+        """Pin freshly-completed full prompt pages into the prefix cache
+        (first writer wins; generated-token pages are never cached)."""
+        if self.prefix is None:
+            return
+        for i, entry in enumerate(self.slot_entry):
+            if entry is None:
                 continue
-            stepped.append(i)
+            n_full = len(entry.req.prompt) // self.page_size
+            j = self.slot_cache_j[i]
+            while j < min(n_full, self.host_table.shape[1]) \
+                    and self.slot_pos[i] >= (j + 1) * self.page_size:
+                pid = int(self.host_table[i, j])
+                if pid >= 0:       # may be gone (SWA reclamation)
+                    self.prefix.insert(entry.hashes[j], pid, self.alloc)
+                j += 1
+            self.slot_cache_j[i] = j
+
+    # ------------------------------------------------------------ stepping
+    def _advance(self):
+        if self.chunk > 1 and any(self.slot_pending[i]
+                                  for i, e in enumerate(self.slot_entry)
+                                  if e is not None):
+            self._advance_chunked()
+        else:
+            self._advance_decode()
+        if self.kv_cache == "paged":
+            self._reclaim_swa_pages()
+            self._insert_prefix_pages()
+
+    def _active_counts(self, chunk: int) -> List[int]:
+        counts = [0] * self.slots
+        for i, entry in enumerate(self.slot_entry):
+            if entry is None:
+                continue
+            counts[i] = min(chunk, len(self.slot_pending[i])) \
+                if self.slot_pending[i] else 1
+        return counts
+
+    def _advance_decode(self):
+        """One token per active slot through the backend's decode step."""
+        counts = self._active_counts(1)
+        if self.kv_cache == "paged":
+            self._ensure_pages_or_preempt(counts)
+        tokens = np.zeros((self.slots,), np.int32)
+        for i, entry in enumerate(self.slot_entry):
+            if entry is None:
+                continue
             if self.slot_pending[i]:
                 tokens[i] = self.slot_pending[i][0]
             elif self.slot_out[i]:
                 tokens[i] = self.slot_out[i][-1]
             else:
-                tokens[i] = req.prompt[-1]
-        if self.kv_cache == "paged":
-            self._ensure_pages()
+                tokens[i] = entry.req.prompt[-1]
         self.state, logits = self._step(self.params, self.state,
                                         jnp.asarray(tokens))
         self.stats["steps"] += 1
+        now = time.perf_counter()
         if self.kv_cache == "paged":
-            for i in stepped:
-                self.slot_pos[i] += 1
-            self._reclaim_swa_pages()
+            for i, entry in enumerate(self.slot_entry):
+                if entry is not None:
+                    self.slot_pos[i] += 1
         logits = np.asarray(logits[:, : self.cfg.vocab])
-        for i, req in enumerate(self.slot_req):
-            if req is None:
+        for i, entry in enumerate(self.slot_entry):
+            if entry is None:
                 continue
             if self.slot_pending[i]:
                 self.slot_pending[i].pop(0)
                 if self.slot_pending[i]:
                     continue  # still prefilling
-            # sample the next token from this step's logits
-            if req.temperature > 0:
-                self.key, sub = jax.random.split(self.key)
-                nxt = int(jax.random.categorical(
-                    sub, jnp.asarray(logits[i]) / req.temperature))
+            self._emit(i, logits[i], now)
+
+    def _advance_chunked(self):
+        """Mixed prefill+decode step: up to ``chunk`` prompt tokens per
+        prefilling slot, 1 token per decoding slot, all in one call."""
+        counts = self._active_counts(self.chunk)
+        self._ensure_pages_or_preempt(counts)
+        tokens = np.zeros((self.slots, self.chunk), np.int32)
+        for i, entry in enumerate(self.slot_entry):
+            if entry is None:
+                continue
+            if self.slot_pending[i]:
+                k = counts[i]
+                tokens[i, :k] = self.slot_pending[i][:k]
+            elif self.slot_out[i]:
+                tokens[i, 0] = self.slot_out[i][-1]
             else:
-                nxt = int(logits[i].argmax())
-            self.slot_out[i].append(nxt)
-            if len(self.slot_out[i]) >= req.max_new:
-                self.results.append(Result(req.rid, self.slot_out[i]))
-                self.slot_req[i] = None
-                if self.kv_cache == "paged":
-                    # return pages eagerly — don't wait for a refill
-                    self._release_slot_pages(i)
+                tokens[i, 0] = entry.req.prompt[-1]
+        self.state, logits = self._prefill(self.params, self.state,
+                                           jnp.asarray(tokens),
+                                           jnp.asarray(counts, jnp.int32))
+        self.stats["steps"] += 1
+        now = time.perf_counter()
+        for i, entry in enumerate(self.slot_entry):
+            if entry is not None:
+                self.slot_pos[i] += counts[i]
+        logits = np.asarray(logits[:, :, : self.cfg.vocab])
+        for i, entry in enumerate(self.slot_entry):
+            if entry is None:
+                continue
+            if self.slot_pending[i]:
+                del self.slot_pending[i][:counts[i]]
+                if self.slot_pending[i]:
+                    continue  # still prefilling
+            self._emit(i, logits[i, counts[i] - 1], now)
+
+    def _emit(self, i: int, logits_i: np.ndarray, now: float):
+        """Sample the next token for slot ``i`` from this step's logits;
+        finish the request when max_new is reached."""
+        entry = self.slot_entry[i]
+        req = entry.req
+        if req.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            nxt = int(jax.random.categorical(
+                sub, jnp.asarray(logits_i) / req.temperature))
+        else:
+            nxt = int(logits_i.argmax())
+        self.slot_out[i].append(nxt)
+        rec = entry.record
+        if rec["first_token_time"] is None:
+            rec["first_token_time"] = now
+            rec["first_token_step"] = self.stats["steps"]
+        if len(self.slot_out[i]) >= req.max_new:
+            self.results.append(Result(req.rid, self.slot_out[i]))
+            rec["finish_time"] = now
+            rec["n_generated"] = len(self.slot_out[i])
+            self.slot_entry[i] = None
+            if self.kv_cache == "paged":
+                # return pages eagerly — don't wait for a refill
+                self._release_slot_pages(i)

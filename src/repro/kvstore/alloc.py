@@ -6,10 +6,15 @@ request completes or its slot is reset, and (on pure-SWA architectures)
 reclaims pages that have slid entirely behind the attention window.
 Page 0 is never handed out — it is the in-jit write sink for inactive
 slots (see pool.GARBAGE_PAGE).
+
+Pages are refcounted so the shared-prefix cache (sched.prefix) can hand
+one physical page to several sequences at once: ``alloc()`` returns a
+page at refcount 1, ``ref()`` adds an owner, and ``free()`` drops one —
+the page returns to the free list only when its last owner lets go.
 """
 from __future__ import annotations
 
-from typing import Iterable, List
+from typing import Dict, Iterable, List
 
 from repro.kvstore.pool import GARBAGE_PAGE
 
@@ -26,17 +31,22 @@ class PageAllocator:
         # LIFO free list, ascending hand-out order (nice for debugging)
         self._free: List[int] = list(range(n_pages - 1, GARBAGE_PAGE, -1))
         self._used: set = set()
+        self._ref: Dict[int, int] = {}
         self.peak = 0
         self.total_allocs = 0
 
     # ------------------------------------------------------------- queries
     @property
     def in_use(self) -> int:
+        """Distinct pages with at least one owner (sharing counts once)."""
         return len(self._used)
 
     @property
     def available(self) -> int:
         return len(self._free)
+
+    def refcount(self, pid: int) -> int:
+        return self._ref.get(pid, 0)
 
     # --------------------------------------------------------------- ops
     def alloc(self) -> int:
@@ -47,16 +57,33 @@ class PageAllocator:
                 "requests faster")
         pid = self._free.pop()
         self._used.add(pid)
+        self._ref[pid] = 1
         self.total_allocs += 1
         self.peak = max(self.peak, self.in_use)
         return pid
 
+    def ref(self, pid: int) -> int:
+        """Add an owner to a live page (prefix sharing). Returns the new
+        refcount; refusing to resurrect a freed page keeps double-free
+        bugs loud instead of silently aliasing."""
+        if pid not in self._used:
+            raise ValueError(f"ref() on page {pid} which is not allocated")
+        self._ref[pid] += 1
+        return self._ref[pid]
+
     def free(self, pages: Iterable[int]) -> None:
+        """Drop one owner per listed page; a page with remaining owners
+        stays resident.  Unallocated ids are skipped (idempotent — a slot
+        reset may race a request-completion free)."""
         for pid in pages:
             if pid == GARBAGE_PAGE or pid < 0:
                 continue
             if pid not in self._used:     # idempotent (reset after finish)
                 continue
+            self._ref[pid] -= 1
+            if self._ref[pid] > 0:
+                continue                  # another owner (shared prefix)
+            del self._ref[pid]
             self._used.remove(pid)
             self._free.append(pid)
 

@@ -81,6 +81,49 @@ def paged_attention_xla(q: jnp.ndarray, pool: PagedKV, table: jnp.ndarray,
     return o.reshape(b, h, dh)
 
 
+def paged_attention_xla_chunk(q: jnp.ndarray, pool: PagedKV,
+                              table: jnp.ndarray, q_pos: jnp.ndarray,
+                              window, *, scale: Optional[float] = None,
+                              cap: Optional[float] = None) -> jnp.ndarray:
+    """Multi-query variant for the chunked-prefill step: q [B, H, C, Dh]
+    at absolute positions ``q_pos`` [B, C] against the paged pool ->
+    [B, H, C, Dh].
+
+    Same einsum/precision structure as :func:`paged_attention_xla` with a
+    query axis threaded through (bf16 pools keep operands bf16 with f32
+    accumulation, so a C=1 chunk is bit-identical to the decode path) —
+    chunk tokens see each other through the pool because their K/V are
+    written before the chunk attends."""
+    b, h, c, dh = q.shape
+    _, hkv, ps, _ = pool.k_pages.shape
+    g = h // hkv
+    npp = table.shape[1]
+    scale = (dh ** -0.5) if scale is None else scale
+    safe = jnp.maximum(table, poolmod.GARBAGE_PAGE)
+    k = jnp.take(pool.k_pages, safe, axis=0)       # [B, P, Hkv, ps, Dh]
+    v = jnp.take(pool.v_pages, safe, axis=0)
+    cdt = jnp.float32 if pool.quantized else k.dtype
+    qg = q.reshape(b, hkv, g, c, dh).astype(cdt)
+    s = jnp.einsum("bkgqd,bpkcd->bkgqpc", qg, k.astype(cdt),
+                   preferred_element_type=jnp.float32) * scale
+    if pool.quantized:
+        ks = jnp.take(pool.k_scale, safe, axis=0)  # [B, P, Hkv]
+        s = s * ks.transpose(0, 2, 1)[:, :, None, None, :, None]
+    s = _softcap(s, cap)
+    mask = poolmod.chunk_attention_mask(
+        table, q_pos, jnp.asarray(window, jnp.int32),
+        pool.page_size).reshape(b, c, npp, ps)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s.reshape(b, hkv, g, c, npp * ps), axis=-1)
+    p = p.reshape(b, hkv, g, c, npp, ps)
+    if pool.quantized:
+        vs = jnp.take(pool.v_scale, safe, axis=0)
+        p = p * vs.transpose(0, 2, 1)[:, :, None, None, :, None]
+    o = jnp.einsum("bkgqpc,bpkcd->bkgqd", p.astype(cdt), v.astype(cdt),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, c, dh)
+
+
 # ---------------------------------------------------------------- pallas
 def _paged_kernel(table_ref, pos_ref, win_ref, q_ref, *refs,
                   scale, cap, quantized, pb, ps, nblk):

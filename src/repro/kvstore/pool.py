@@ -115,10 +115,16 @@ def _write_page_rescale(pages, scale, new, new_s, safe_page, slot):
 
 
 def update(pool: PagedKV, table: jnp.ndarray, k_new: jnp.ndarray,
-           v_new: jnp.ndarray, cur_pos: jnp.ndarray) -> PagedKV:
+           v_new: jnp.ndarray, cur_pos: jnp.ndarray,
+           valid: Optional[jnp.ndarray] = None) -> PagedKV:
     """Insert one token's k/v ([B, Hkv, Dh]) at absolute position
     ``cur_pos`` [B] through the page table.  Pure function of array
     inputs — safe inside the jitted, scanned decode step.
+
+    ``valid`` [B] bool (optional) redirects invalid rows to the garbage
+    sink — the chunked-prefill step uses it for the padding tail of a
+    short chunk, so one fixed-width step serves mixed prefill+decode
+    batches without conditional writes.
 
     int8 mode is two-speed: when every page's current scale already
     covers the new token (the steady state — scales grow only a handful
@@ -130,6 +136,8 @@ def update(pool: PagedKV, table: jnp.ndarray, k_new: jnp.ndarray,
     pi = jnp.clip(cur_pos // ps, 0, npp - 1)
     slot = cur_pos % ps
     page = table[jnp.arange(table.shape[0]), pi]          # [B]
+    if valid is not None:
+        page = jnp.where(valid, page, NO_PAGE)
     safe = jnp.maximum(page, GARBAGE_PAGE)                # -1 -> sink page
     if not pool.quantized:
         dt = pool.k_pages.dtype
@@ -140,6 +148,10 @@ def update(pool: PagedKV, table: jnp.ndarray, k_new: jnp.ndarray,
     vf = v_new.astype(jnp.float32)
     k_amax = jnp.max(jnp.abs(kf), axis=-1) / 127.0        # [B, Hkv]
     v_amax = jnp.max(jnp.abs(vf), axis=-1) / 127.0
+    if valid is not None:
+        # a padded token must never grow a real page's scale
+        k_amax = jnp.where(valid[:, None], k_amax, 0.0)
+        v_amax = jnp.where(valid[:, None], v_amax, 0.0)
     old_ks = pool.k_scale[safe]
     old_vs = pool.v_scale[safe]
     new_ks = jnp.maximum(old_ks, k_amax)
@@ -193,6 +205,25 @@ def attention_mask(table: jnp.ndarray, cur_pos: jnp.ndarray,
     ok = alloc & (pos <= cur_pos[:, None])
     win_lo = jnp.where(window < 0, jnp.int32(-1),
                        cur_pos[:, None] - window)
+    return ok & (pos > win_lo)
+
+
+def chunk_attention_mask(table: jnp.ndarray, q_pos: jnp.ndarray,
+                         window: jnp.ndarray,
+                         page_size: int) -> jnp.ndarray:
+    """[B, C, npp*ps] bool: positions each of C chunk queries (at absolute
+    positions ``q_pos`` [B, C]) may attend to — the multi-query
+    generalization of :func:`attention_mask` for the chunked-prefill
+    step.  Every key position <= a query's position has been written by
+    the time the chunk attends (writes happen first, in position order),
+    so plain causality over table-index positions is sufficient."""
+    b, npp = table.shape
+    pos = jnp.arange(npp * page_size)[None, None, :]      # [1, 1, npp*ps]
+    alloc = jnp.repeat(table >= 0, page_size,
+                       axis=1)[:, None, :]                # [B, 1, npp*ps]
+    ok = alloc & (pos <= q_pos[:, :, None])
+    win_lo = jnp.where(window < 0, jnp.int32(-1),
+                       q_pos[:, :, None] - window)
     return ok & (pos > win_lo)
 
 

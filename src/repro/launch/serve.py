@@ -1,8 +1,10 @@
 """Serving launcher: batched decode through the `repro.api.Engine` facade,
-optionally AIDA-compressed weights.
+optionally AIDA-compressed weights, with reproducible heterogeneous
+workloads driven by `repro.sched.workload`.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-      --compress aida --density 0.1 --requests 16
+      --compress aida --density 0.1 --requests 16 \
+      --workload heterogeneous --chunk 8 --policy sjf
 (Full-size archs need a checkpoint; without one this initializes random
 weights at a REDUCED size for a functional smoke serve.)
 """
@@ -11,8 +13,10 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.api import CompressionSpec, Engine, Request
+from repro.api import CompressionSpec, Engine
 from repro.configs import get, reduced
+from repro.sched import SchedConfig, WorkloadSpec, generate, summarize
+from repro.sched.workload import PRESETS
 
 
 def main():
@@ -26,8 +30,27 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--full-size", action="store_true")
     ap.add_argument("--kv-cache", default=None,
-                    choices=[None, "full", "paged"],
-                    help="paged = int8 page-pool KV cache (repro.kvstore)")
+                    choices=[None, "auto", "full", "paged"],
+                    help="None/auto = paged page-pool KV wherever the "
+                         "arch has attention (repro.kvstore)")
+    ap.add_argument("--workload", default="uniform", choices=list(PRESETS),
+                    help="request-mix preset (sched.workload): prompt "
+                         "lengths, max_new, arrival process")
+    ap.add_argument("--prompt-len", type=int, default=None,
+                    help="override the preset's prompt-length range with "
+                         "a fixed length")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload RNG seed (schedules replay exactly)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="prefill tokens per model call (1 = token-by-"
+                         "token; paged KV + attention-only archs)")
+    ap.add_argument("--policy", default="fifo", choices=["fifo", "sjf"],
+                    help="admission order: FIFO or shortest-prompt-first")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share full prompt-prefix pages across requests")
+    ap.add_argument("--kv-pool-pages", type=int, default=None,
+                    help="page-pool size (small pools exercise admission "
+                         "control + preemption instead of crashing)")
     args = ap.parse_args()
 
     cfg = get(args.arch) if args.full_size else reduced(get(args.arch))
@@ -42,15 +65,39 @@ def main():
               f"projections, {eng.stats['ratio']:.1f}x weight memory "
               f"(backend: {eng.backend.name})")
 
-    reqs = [Request(prompt=[1, 2 + rid % 7, 3], rid=rid,
-                    max_new=args.max_new) for rid in range(args.requests)]
+    overrides = dict(n_requests=args.requests, max_new=(1, args.max_new),
+                     vocab=cfg.vocab, seed=args.seed)
+    if args.prompt_len is not None:
+        overrides["prompt_len"] = (args.prompt_len, args.prompt_len)
+    spec = WorkloadSpec.preset(args.workload, **overrides)
+    arrivals = generate(spec)
+    max_len = 128
+
+    sess = eng.session(batch_slots=args.slots, max_len=max_len,
+                       kv_cache=args.kv_cache,
+                       kv_pool_pages=args.kv_pool_pages,
+                       scheduler=SchedConfig(
+                           policy=args.policy, chunk=args.chunk,
+                           prefix_cache=args.prefix_cache))
+    print(f"[serve] workload={args.workload} seed={args.seed} "
+          f"kv={sess.kv_cache} chunk={sess.chunk} policy={args.policy}")
     t0 = time.perf_counter()
-    results = eng.serve(reqs, batch_slots=args.slots, max_len=128,
-                        kv_cache=args.kv_cache)
+    results = sess.run_workload(arrivals)
     dt = time.perf_counter() - t0
-    n_tok = sum(len(r.tokens) for r in results)
-    print(f"[serve] {len(results)} requests, {n_tok} tokens, "
-          f"{n_tok/dt:.1f} tok/s")
+    m = summarize(sess.records, dt, sess.stats["steps"])
+    print(f"[serve] {m['completed']}/{m['requests']} requests, "
+          f"{m['tokens']} tokens, {m['tok_per_s']:.1f} tok/s, "
+          f"goodput {m['goodput_req_per_s']:.2f} req/s "
+          f"({m['steps']} model calls)")
+    if m["ttft_s"]:
+        print(f"[serve] TTFT p50 {m['ttft_s']['p50']*1e3:.0f} ms / "
+              f"p99 {m['ttft_s']['p99']*1e3:.0f} ms; "
+              f"preemptions {m['preemptions']}, "
+              f"prefix pages reused {m['prefix_pages_reused']}")
+    if sess.kv_cache == "paged":
+        print(f"[serve] pages: peak {sess.stats['pages_peak']}, "
+              f"allocs {sess.stats['page_allocs']}, "
+              f"reclaimed(SWA) {sess.stats['pages_reclaimed_swa']}")
 
 
 if __name__ == "__main__":

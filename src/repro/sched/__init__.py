@@ -1,0 +1,29 @@
+"""`repro.sched` — the continuous-batching serving scheduler subsystem.
+
+The layer between requests and the decode step: a policy object decides
+*which* requests occupy batch slots (`scheduler` — FIFO or
+shortest-prompt-first, with page-pool admission control and
+youngest-first preemption instead of `OutOfPages` crashes), a jitted
+chunked-prefill step gets prompts into KV pages C tokens per model call
+instead of one (`prefill`), a content-addressed page cache prefills
+shared prompt prefixes once (`prefix`, built on `PageAllocator`
+refcounts), and `workload` + `metrics` make heterogeneous serving
+reproducible and measurable (TTFT / TPOT / p50-p99 / goodput — the
+`"serving"` section of BENCH_api.json).
+
+`repro.api.Session` drives all of it; this package holds the policy and
+the kernels, the Session holds the device state.
+"""
+from repro.sched.metrics import percentile, summarize
+from repro.sched.prefill import (make_prefill_step, prefill_step,
+                                 supports_chunked_prefill)
+from repro.sched.prefix import PrefixCache, page_hashes
+from repro.sched.scheduler import SchedConfig, Scheduler, SchedEntry
+from repro.sched.workload import WorkloadSpec, generate, timed_requests
+
+__all__ = [
+    "PrefixCache", "SchedConfig", "SchedEntry", "Scheduler",
+    "WorkloadSpec", "generate", "make_prefill_step", "page_hashes",
+    "percentile", "prefill_step", "summarize",
+    "supports_chunked_prefill", "timed_requests",
+]

@@ -1,0 +1,72 @@
+"""Serving metrics: TTFT / TPOT / latency percentiles / goodput.
+
+The Session records one lifecycle dict per request (submit/admit/first
+token/finish, in both wall seconds and model-call steps); `summarize`
+folds them into the JSON-ready `"serving"` record that
+`Engine.benchmark` writes to BENCH_api.json and
+`benchmarks/check_regression.py` gates.
+
+Step-denominated numbers (`first_token_calls`, preemptions, prefix
+pages) are deterministic for a given workload — those carry the hard CI
+assertions; wall-clock numbers (TTFT seconds, tok/s, goodput) are the
+host-noisy trajectory signal and get the usual dual-unit tolerance.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+
+def percentile(values: Sequence[float], q: float) -> Optional[float]:
+    """Nearest-rank percentile (q in [0, 100]); None on empty input."""
+    if not values:
+        return None
+    xs = sorted(values)
+    k = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[k]
+
+
+def _dist(values: Sequence[float], scale: float = 1.0) -> Optional[dict]:
+    if not values:
+        return None
+    vs = [v * scale for v in values]
+    return {"mean": round(sum(vs) / len(vs), 4),
+            "p50": round(percentile(vs, 50), 4),
+            "p99": round(percentile(vs, 99), 4)}
+
+
+def summarize(records: Sequence[Dict], span_seconds: float,
+              steps: int) -> dict:
+    """Fold per-request lifecycle records into the serving summary.
+
+    records: dicts with prompt_len, max_new, n_generated, submit_time,
+    first_token_time, finish_time, submit_step, admit_step,
+    first_token_step, preemptions, prefix_pages (absent fields skipped).
+    """
+    done = [r for r in records if r.get("finish_time") is not None]
+    ttft = [r["first_token_time"] - r["submit_time"] for r in records
+            if r.get("first_token_time") is not None]
+    tpot: List[float] = []
+    for r in done:
+        if r["n_generated"] > 1 and r.get("first_token_time") is not None:
+            tpot.append((r["finish_time"] - r["first_token_time"])
+                        / (r["n_generated"] - 1))
+    first_calls = [r["first_token_step"] - r["admit_step"] for r in records
+                   if r.get("first_token_step") is not None
+                   and r.get("admit_step") is not None]
+    n_tok = sum(r["n_generated"] for r in done)
+    span = max(span_seconds, 1e-9)
+    return {
+        "requests": len(records),
+        "completed": len(done),
+        "tokens": n_tok,
+        "seconds": round(span_seconds, 4),
+        "steps": steps,
+        "tok_per_s": round(n_tok / span, 2),
+        "goodput_req_per_s": round(len(done) / span, 3),
+        "ttft_s": _dist(ttft),
+        "tpot_s": _dist(tpot),
+        "first_token_calls": _dist(first_calls) if first_calls else None,
+        "preemptions": sum(r.get("preemptions", 0) for r in records),
+        "prefix_pages_reused": sum(r.get("prefix_pages", 0)
+                                   for r in records),
+    }

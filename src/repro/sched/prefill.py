@@ -1,0 +1,153 @@
+"""Chunked prefill: C prompt tokens per model call, written straight into
+KV pages.
+
+The decode step moves one token per slot per call, so a P-token prompt
+costs P model calls before the first generated token.  This step embeds a
+[B, C] token block, runs the layer stack ONCE over all C positions, and
+writes each position's K/V into the page pool through the shared page
+table — first-token latency drops from P calls to ceil(P/C).
+
+Mixed prefill+decode batches fall out of the per-slot ``n_tok`` vector:
+a prefilling slot carries up to C prompt tokens, a decoding slot carries
+1 (its next token, sampled host-side from the previous step's logits),
+an idle slot carries 0 — padding positions are redirected to the garbage
+page by ``update(valid=...)`` and their logits ignored, so one fixed
+[B, C] shape serves every step and the step jits once per (cfg, C).
+
+Within-chunk causality needs no extra machinery: all C tokens' K/V are
+written (in position order, via a scan over `kvstore.update` — identical
+two-speed int8 semantics as decode) *before* the chunk attends, and the
+page-table index IS the absolute position, so the multi-query mask of
+`paged_attention_xla_chunk` sees in-chunk keys exactly like history.
+
+Scope: paged KV only (that is the point — prefill writes land in pages),
+and architectures without per-token recurrent state (rwkv6/hymba step
+their SSM state one token at a time; the Session falls back to
+token-by-token prefill there, see `supports_chunked_prefill`).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import kvstore as kvs
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import COMPUTE_DTYPE, embed, mlp, softcap, unembed
+from repro.models.transformer import _norm
+
+
+def supports_chunked_prefill(cfg: ArchConfig) -> bool:
+    """Chunked prefill needs attention-only token mixing: families with a
+    per-token recurrent state (rwkv6 time-mix, hymba's mamba branch)
+    would have to scan the chunk token-by-token anyway."""
+    return cfg.has_decode and cfg.family not in ("rwkv6", "hymba")
+
+
+def _block_prefill(cfg: ArchConfig, p: Dict, st: Dict, x, positions,
+                   valid, window, table):
+    """One layer over a [B, C, D] chunk: write C tokens' K/V into pages,
+    then attend all C queries over the (now-updated) page table."""
+    nrm = _norm(cfg)
+    scale = (cfg.head_dim ** -0.5) if cfg.attn_scale is None \
+        else cfg.attn_scale
+    q, k, v = attn._qkv(p["attn"], nrm(x, p["ln1"]), cfg.n_heads,
+                        cfg.n_kv, cfg.head_dim, positions, cfg.rope_theta)
+    pool = st["kv"]
+
+    def write(pl_, j):
+        return kvs.update(pl_, table,
+                          k[:, :, j].astype(jnp.float32),
+                          v[:, :, j].astype(jnp.float32),
+                          positions[:, j], valid=valid[:, j]), None
+
+    pool, _ = jax.lax.scan(write, pool, jnp.arange(x.shape[1]))
+    o = kvs.paged_attention_xla_chunk(q, pool, table, positions,
+                                      jnp.asarray(window, jnp.int32),
+                                      scale=scale, cap=cfg.attn_softcap)
+    h = attn.dense(attn._merge_heads(o.astype(COMPUTE_DTYPE)),
+                   p["attn"]["wo"])
+    new_st = dict(st)
+    new_st["kv"] = pool
+    if cfg.post_norms:
+        h = nrm(h, p["ln1p"])
+    x = x + h
+    if cfg.moe:
+        h, _ = moe_mod.moe_apply(
+            p["moe"], nrm(x, p["ln2"]), n_experts=cfg.moe.n_experts,
+            top_k=cfg.moe.top_k, group_size=cfg.moe.group_size,
+            capacity_factor=cfg.moe.capacity_factor)
+    else:
+        h = mlp(nrm(x, p["ln2"]), p["mlp"], cfg.act)
+    if cfg.post_norms:
+        h = nrm(h, p["ln2p"])
+    return new_st, x + h
+
+
+def _stack_prefill(cfg: ArchConfig, stacked: Dict, states, x, positions,
+                   valid, table):
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    def body(xc, inp):
+        p, st, win = inp
+        new_st, xo = _block_prefill(cfg, p, st, xc, positions, valid, win,
+                                    table)
+        return xo, new_st
+
+    x, new_states = jax.lax.scan(body, x, (stacked, states, windows))
+    return new_states, x
+
+
+def prefill_step(cfg: ArchConfig, params: Dict, state: Dict,
+                 tokens: jnp.ndarray,
+                 n_tok: jnp.ndarray) -> Tuple[Dict, jnp.ndarray]:
+    """tokens [B, C], n_tok [B] (0 = idle slot) -> (state', logits
+    [B, C, Vpad]).  Slot i's tokens occupy absolute positions
+    ``state["pos"][i] .. +n_tok[i]-1``; the caller ensures those
+    positions' pages exist in the table and samples from
+    ``logits[i, n_tok[i]-1]``."""
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"{cfg.name} ({cfg.family}) has per-token "
+                         "recurrent state; chunked prefill unsupported")
+    table = state.get("page_table")
+    if table is None:
+        raise ValueError("chunked prefill writes into KV pages; "
+                         "state has no page_table (kv_cache='paged' only)")
+    b, c = tokens.shape
+    offs = jnp.arange(c, dtype=jnp.int32)
+    positions = state["pos"][:, None] + offs[None, :]        # [B, C]
+    valid = offs[None, :] < n_tok[:, None]                   # [B, C]
+    x = embed(tokens, params["embed"])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, COMPUTE_DTYPE)
+    new_layers, x = _stack_prefill(cfg, params["layers"], state["layers"],
+                                   x, positions, valid, table)
+    x = _norm(cfg)(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = unembed(x, params["embed"])
+    else:
+        logits = jnp.matmul(x, params["lm_head"].astype(COMPUTE_DTYPE),
+                            preferred_element_type=jnp.float32)
+    logits = softcap(logits, cfg.final_softcap)
+    new_state = {"layers": new_layers, "pos": state["pos"] + n_tok,
+                 "page_table": table}
+    return new_state, logits
+
+
+# Compiled chunk steps keyed by (cfg, C): the step is backend-agnostic
+# (compressed FC leaves route through repro.api.dispatch inside dense()),
+# so sessions on the same geometry share one jitted step per chunk width.
+_PREFILL_CACHE: dict = {}
+
+
+def make_prefill_step(cfg: ArchConfig, chunk: int):
+    """The jitted [B, chunk] prefill step for ``cfg`` (cached)."""
+    key = (cfg, chunk)
+    if key not in _PREFILL_CACHE:
+        _PREFILL_CACHE[key] = jax.jit(
+            lambda params, state, tokens, n_tok:
+            prefill_step(cfg, params, state, tokens, n_tok))
+    return _PREFILL_CACHE[key]

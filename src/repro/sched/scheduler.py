@@ -1,0 +1,157 @@
+"""Continuous-batching scheduling policy: admission order, page-pool
+admission control, preemption victim choice.
+
+The Scheduler owns the *waiting* side of serving — requests that have
+been submitted but hold no batch slot — while `api.Session` owns slots
+and device state.  Separation of concerns:
+
+* **policy** — who goes next.  ``fifo`` is strict head-of-line (a
+  request that does not fit blocks the ones behind it: deterministic,
+  starvation-free); ``sjf`` (shortest-prompt-first) picks the smallest
+  admissible prompt, which maximizes slot turnover under heterogeneous
+  workloads at the cost of possible starvation of long prompts.
+* **admission control** — a request is admitted only when its
+  *worst-case* page need (every token it could ever hold live,
+  ``ceil(min(prompt+max_new, max_len)/page_size)`` minus pages it will
+  reuse from the prefix cache) fits the allocator's free list right now.
+  Concurrent requests may still out-grow the pool together; that is what
+  preemption is for.
+* **preemption** — under page pressure the *youngest* admitted request
+  (highest admission sequence number) is evicted back to the queue
+  front: its pages are freed, its generated-so-far tokens ride along in
+  the entry, and on re-admission the Session re-prefills
+  prompt+generated (vLLM-style recompute — with greedy sampling the
+  resumed stream is token-identical to an uninterrupted run).  The
+  oldest request is never preempted, so the system always makes
+  progress; a pool too small for even one request still raises
+  `OutOfPages`.
+
+Everything here is host-side bookkeeping — no jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Deque, List, Optional
+
+import collections
+
+POLICIES = ("fifo", "sjf")
+
+
+@dataclasses.dataclass
+class SchedConfig:
+    """Serving scheduler knobs (see module docstring for semantics)."""
+    policy: str = "fifo"          # "fifo" | "sjf"
+    chunk: int = 1                # prefill tokens per model call (1 = off)
+    admission: bool = True        # page-pool admission control
+    prefix_cache: bool = False    # shared-prefix page reuse (paged only)
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; "
+                             f"choose one of {POLICIES}")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+
+    @classmethod
+    def coerce(cls, val) -> "SchedConfig":
+        if val is None:
+            return cls()
+        if isinstance(val, cls):
+            return val
+        if isinstance(val, str):
+            return cls(policy=val)
+        if isinstance(val, dict):
+            return cls(**val)
+        raise TypeError(f"cannot make a SchedConfig from {val!r}")
+
+
+@dataclasses.dataclass
+class SchedEntry:
+    """One queued (or preempted-back-to-queue) request plus its serving
+    lifecycle state.  ``out`` carries generated tokens across a
+    preemption (recompute resume); ``seq`` is the admission age —
+    -1 until first admitted, then monotone (youngest = max)."""
+    req: object                   # api.session.Request
+    submit_step: int = 0
+    submit_time: float = 0.0
+    out: List[int] = dataclasses.field(default_factory=list)
+    seq: int = -1
+    preemptions: int = 0
+    prefix_pages: int = 0         # pages attached from the prefix cache
+    record: Optional[dict] = None  # lifecycle metrics (api.Session owns)
+    hashes: Optional[list] = None  # prompt page hashes, computed once
+
+
+class Scheduler:
+    def __init__(self, cfg: Optional[SchedConfig] = None):
+        self.cfg = SchedConfig.coerce(cfg)
+        self.queue: Deque[SchedEntry] = collections.deque()
+        self._seq = 0
+        self.stats = {"preemptions": 0, "admission_blocks": 0}
+
+    # ------------------------------------------------------------ queue
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def submit(self, req, step: int = 0, now: float = 0.0) -> SchedEntry:
+        e = SchedEntry(req=req, submit_step=step, submit_time=now)
+        self.queue.append(e)
+        return e
+
+    def requeue(self, entry: SchedEntry) -> None:
+        """A preempted entry resumes at the queue FRONT — it was admitted
+        once, so anything behind it has strictly lower priority under
+        both policies (fifo: older; sjf: it will be shortest-or-equal
+        among equally-old when it was first picked)."""
+        entry.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.queue.appendleft(entry)
+
+    # -------------------------------------------------------- admission
+    def next_entry(self, fits: Callable[[SchedEntry], bool]
+                   ) -> Optional[SchedEntry]:
+        """Pop the next admissible entry per policy, or None.  ``fits``
+        is the Session's page-need predicate (always-True when admission
+        control is off or the cache is dense)."""
+        if not self.queue:
+            return None
+        if self.cfg.policy == "sjf":
+            order = sorted(range(len(self.queue)),
+                           key=lambda i: (len(self.queue[i].req.prompt)
+                                          + len(self.queue[i].out),
+                                          i))
+        else:                      # fifo: strict head-of-line
+            order = [0]
+        for i in order:
+            e = self.queue[i]
+            if not self.cfg.admission or fits(e):
+                del self.queue[i]
+                # (re-)admission stamps a fresh age: a resumed request is
+                # youngest again until something is admitted after it
+                e.seq = self._seq
+                self._seq += 1
+                return e
+            self.stats["admission_blocks"] += 1
+            if self.cfg.policy == "fifo":
+                return None        # head-of-line blocks
+        return None
+
+    # ------------------------------------------------------- preemption
+    @staticmethod
+    def choose_victim(active: List[Optional[SchedEntry]]) -> Optional[int]:
+        """Slot index of the youngest admitted entry, or None if <= 1
+        active (never preempt the last runner — no progress otherwise)."""
+        live = [(e.seq, i) for i, e in enumerate(active) if e is not None]
+        if len(live) <= 1:
+            return None
+        return max(live)[1]
+
+
+def page_need(prompt_len: int, max_new: int, max_len: int,
+              page_size: int) -> int:
+    """Worst-case pages a request holds simultaneously: every position it
+    can ever write, clipped at the table width (positions beyond max_len
+    are clamped, like the dense cache)."""
+    total = min(prompt_len + max_new, max_len)
+    return -(-total // page_size)

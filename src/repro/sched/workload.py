@@ -1,0 +1,101 @@
+"""Heterogeneous serving workload generator — reproducible request mixes.
+
+Serving claims are only as good as the traffic they are measured on; the
+one-size prompt loops the launchers used before this module hide every
+scheduling effect (admission, preemption, chunked prefill, prefix reuse).
+A `WorkloadSpec` draws (prompt_len, max_new, arrival) from seeded
+distributions, so `launch/serve.py --workload ...`, the `"serving"`
+benchmark section, and the hypothesis sweeps in tests/test_sched.py all
+replay byte-identical request schedules.
+
+Arrivals are expressed in decode STEPS, not wall seconds — the serving
+loop is step-quantized, so step offsets make schedules deterministic
+across hosts of different speed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: named presets for the CLI / benchmarks
+PRESETS = ("uniform", "heterogeneous", "shared-prefix", "burst")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    n_requests: int = 8
+    prompt_len: Tuple[int, int] = (4, 16)     # inclusive uniform range
+    max_new: Tuple[int, int] = (4, 16)        # inclusive uniform range
+    arrival: str = "batch"                    # "batch" | "poisson" | "burst"
+    arrival_rate: float = 0.5                 # requests per STEP (poisson)
+    burst_every: int = 16                     # steps between bursts
+    burst_size: int = 4
+    shared_prefix_len: int = 0                # common head on every prompt
+    vocab: int = 256
+    temperature: float = 0.0
+    seed: int = 0
+
+    @classmethod
+    def preset(cls, name: str, **overrides) -> "WorkloadSpec":
+        base = {
+            "uniform": dict(prompt_len=(8, 8), max_new=(8, 8)),
+            "heterogeneous": dict(prompt_len=(2, 24), max_new=(2, 24),
+                                  arrival="poisson"),
+            "shared-prefix": dict(prompt_len=(18, 28), max_new=(4, 8),
+                                  shared_prefix_len=16),
+            "burst": dict(prompt_len=(4, 16), max_new=(4, 16),
+                          arrival="burst"),
+        }
+        if name not in base:
+            raise ValueError(f"unknown workload preset {name!r}; "
+                             f"choose one of {PRESETS}")
+        kw = dict(base[name])
+        kw.update(overrides)
+        return cls(**kw)
+
+
+def generate(spec: WorkloadSpec) -> List[Tuple[int, "object"]]:
+    """-> [(arrival_step, Request)], sorted by arrival step, rids 0..n-1
+    in arrival order."""
+    from repro.api.session import Request
+    rng = np.random.default_rng(spec.seed)
+    lo_p, hi_p = spec.prompt_len
+    lo_n, hi_n = spec.max_new
+    shared = list(rng.integers(1, spec.vocab, spec.shared_prefix_len)) \
+        if spec.shared_prefix_len else []
+    arrivals: List[int] = []
+    if spec.arrival == "poisson":
+        t = 0.0
+        for _ in range(spec.n_requests):
+            t += rng.exponential(1.0 / max(spec.arrival_rate, 1e-9))
+            arrivals.append(int(t))
+    elif spec.arrival == "burst":
+        for i in range(spec.n_requests):
+            arrivals.append((i // spec.burst_size) * spec.burst_every)
+    else:                                     # "batch": all at step 0
+        arrivals = [0] * spec.n_requests
+    out = []
+    for rid, step in enumerate(sorted(arrivals)):
+        plen = int(rng.integers(lo_p, hi_p + 1))
+        plen = max(plen, spec.shared_prefix_len + 1)  # >=1 unshared token
+        tail = [int(x) for x in rng.integers(1, spec.vocab,
+                                             plen - len(shared))]
+        req = Request(prompt=shared + tail,
+                      max_new=int(rng.integers(lo_n, hi_n + 1)),
+                      temperature=spec.temperature, rid=rid)
+        out.append((step, req))
+    return out
+
+
+def timed_requests(spec_or_name, **overrides) -> List[Tuple[int, "object"]]:
+    """Convenience: accept a WorkloadSpec, a preset name, or None."""
+    if spec_or_name is None:
+        spec = WorkloadSpec(**overrides)
+    elif isinstance(spec_or_name, WorkloadSpec):
+        spec = dataclasses.replace(spec_or_name, **overrides) \
+            if overrides else spec_or_name
+    else:
+        spec = WorkloadSpec.preset(spec_or_name, **overrides)
+    return generate(spec)
