@@ -23,6 +23,12 @@ The paged-KV section ("kv") is gated too:
   * the attention/FC time-share fields must be present and sane —
     they are the trajectory signal the next attention PR builds on.
 
+And the sharding section ("sharding"):
+  * mesh decode must stay token-identical to the single-device path
+    (deterministic — any loss is a real sharding bug);
+  * sharded throughput gates dual-unit: absolute tok/s OR the same-run
+    mesh/single ratio within tol of the baseline's.
+
 And the scheduler section ("serving"):
   * chunked prefill must reach the first token within its call bound
     (ceil(prompt/chunk)+1 — deterministic step counts, no wall clock);
@@ -81,6 +87,43 @@ def check(new: dict, base: dict, tol: float, log=print) -> bool:
         ok = False
     ok &= check_kv(new, base, tol, log=log)
     ok &= check_serving(new, base, tol, log=log)
+    ok &= check_sharding(new, base, tol, log=log)
+    return ok
+
+
+def check_sharding(new: dict, base: dict, tol: float, log=print) -> bool:
+    """Mesh-aware serving gate: token parity with the single-device path
+    is deterministic and must hold exactly; the sharded decode step time
+    gates dual-unit like the FC modes (absolute tok/s OR the same-run
+    mesh/single ratio — host speed cancels in the second unit)."""
+    sh = new.get("sharding")
+    if sh is None:
+        log("  sharding section MISSING from new run")
+        return False
+    ok = True
+    if not sh.get("token_parity"):
+        log("  sharding token parity LOST — mesh decode diverged from "
+            "the single-device path")
+        ok = False
+    tok, ratio = sh.get("tok_per_s_mesh"), sh.get("mesh_over_single")
+    bsh = base.get("sharding", {})
+    btok, bratio = bsh.get("tok_per_s_mesh"), bsh.get("mesh_over_single")
+    if tok is None or ratio is None:
+        log("  sharding throughput fields missing")
+        ok = False
+    elif btok:
+        abs_ok = tok >= btok * (1.0 - tol)
+        rel_ok = bratio and ratio >= bratio * (1.0 - tol)
+        if not (abs_ok or rel_ok):
+            log(f"  sharding mesh throughput REGRESSION {btok:.1f} -> "
+                f"{tok:.1f} tok/s (mesh/single {bratio or 0:.3f} -> "
+                f"{ratio:.3f})")
+            ok = False
+    if ok:
+        step_us = sh.get("decode_step_us_per_shard") or 0
+        log(f"  sharding   parity OK  {tok:.1f} tok/s on "
+            f"{sh.get('n_model')}x{sh.get('n_data')} mesh "
+            f"(x{ratio:.2f} of single, {step_us:.0f} us/shard)  OK")
     return ok
 
 

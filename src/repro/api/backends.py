@@ -27,11 +27,12 @@ class JaxDenseBackend(Executor):
     name = "jax-dense"
     caps = Capabilities(batched_decode=True, modes=("dense",))
 
-    def make_decode_step(self, cfg, unroll: bool = False):
+    def make_decode_step(self, cfg, unroll: bool = False, plan=None):
         from repro.models import model as M
 
         def step(params, state, tokens):
-            return M.decode_step(cfg, params, state, tokens, unroll=unroll)
+            return M.decode_step(cfg, params, state, tokens, unroll=unroll,
+                                 plan=plan)
         return step
 
     def run_fc(self, layer, x):

@@ -13,13 +13,13 @@ shim was removed in PR 2).
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import env
 from repro.api.spec import CompressionSpec
 from repro.core import sparse_fc as sfc
 from repro.kernels import acsr_spmv as sp
@@ -93,8 +93,7 @@ def compress_params(params: Dict, spec: CompressionSpec = None, *,
             return leaf
         L = leaf.shape[0]
         block_rows = spec.block_rows
-        if leaf_mode in ("acsr", "aida") \
-                and os.environ.get("REPRO_TUNE_BLOCK_ROWS") == "1":
+        if leaf_mode in ("acsr", "aida") and env.TUNE_BLOCK_ROWS:
             # encode-time tile search: pick the row-block height by timing
             # the fused kernel on this projection's pruned layer-0 weights
             from repro.core import acsr as acsr_mod
@@ -110,6 +109,12 @@ def compress_params(params: Dict, spec: CompressionSpec = None, *,
                             dtype=spec.dtype)
                for i in range(L)]
         out = _stack_compressed(per)
+        if spec.shards > 1:
+            # shard-aware stacking: pad the partition axis now so a
+            # ShardingPlan with tp == shards splits it with zero
+            # session-time re-stacking (padded rows are inert)
+            from repro.shard.partition import pad_leaf
+            out = pad_leaf(out, spec.shards)
         stats["n_compressed"] += L
         stats["modes"][leaf_mode] = stats["modes"].get(leaf_mode, 0) + L
         stats["bytes_dense"] += leaf.size * 2  # bf16-serving baseline

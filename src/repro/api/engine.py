@@ -105,18 +105,27 @@ class Engine:
                 page_size: int = 16,
                 kv_pool_pages: Optional[int] = None,
                 kv_dtype: Optional[str] = None,
-                scheduler=None) -> Session:
+                scheduler=None, mesh=None) -> Session:
         """A continuous-batching serving session on the active backend.
 
         ``scheduler``: a sched.SchedConfig (or dict / policy name) —
         admission policy, prefill chunk width, prefix caching.
+
+        ``mesh``: a jax Mesh with a ``model`` axis — serving goes
+        tensor-parallel on an explicit `repro.shard.ShardingPlan`:
+        compressed FC runs shard-local (each device owns a band of row
+        blocks / output channels), KV pools shard their head axis, and
+        the decode / chunked-prefill steps compile with input/output
+        shardings.  ``mesh=None`` (default) is the unchanged
+        single-device path.
 
         On the Pallas backend, every unique compressed-FC geometry is
         autotuned for this batch width *before* the decode step compiles,
         so the jitted step traces against the winning tiles
         (kernels.tune; disable with REPRO_AUTOTUNE=0).  A paged-KV
         session additionally pre-tunes the paged-attention impl/tile
-        choice for this (geometry, batch, backend).
+        choice for this (geometry, batch, backend); a mesh session tunes
+        the *shard-local* FC geometries its shard_map kernels will run.
         """
         if self.cfg is None:
             raise ValueError("serving needs an ArchConfig")
@@ -124,15 +133,31 @@ class Engine:
         if not backend.caps.batched_decode:
             raise CapabilityError(
                 f"backend {backend.name!r} cannot serve (no batched decode)")
+        plan = None
+        if mesh is not None:
+            from repro import shard as shardmod
+            plan = shardmod.make_plan(mesh, self.cfg)
         from repro.kernels import ops, tune
+        tp = plan.tp if plan is not None else 1
         if backend.name == "pallas" and self.compression is not None:
             if tune.enabled():
-                tune.tune_params(self.params, batch_slots,
-                                 ops.pallas_interpret())
+                if tp > 1:
+                    # the sharded step only looks up shard-LOCAL
+                    # geometries; tuning the global ones would be
+                    # wasted session-startup wall-clock
+                    from repro import shard as shardmod
+                    shardmod.tune_local_views(self.params, plan,
+                                              batch_slots,
+                                              ops.pallas_interpret())
+                else:
+                    tune.tune_params(self.params, batch_slots,
+                                     ops.pallas_interpret())
         import repro.api.session as sess_mod
         resolved_kv = sess_mod.resolve_kv_cache(kv_cache, self.cfg)
+        # head-sharded (tp>1) sessions force the XLA gather path, so the
+        # paged-attention tuner only matters when heads stay whole
         if resolved_kv == "paged" and self.cfg.family != "rwkv6" \
-                and tune.enabled():
+                and tp == 1 and tune.enabled():
             tune.tune_paged(self.cfg, batch_slots, max_len, page_size,
                             kv_dtype or sess_mod.KV_DTYPE_DEFAULT,
                             ops.pallas_interpret())
@@ -140,7 +165,7 @@ class Engine:
                        max_len=max_len, seed=seed, backend=backend,
                        kv_cache=kv_cache, page_size=page_size,
                        kv_pool_pages=kv_pool_pages, kv_dtype=kv_dtype,
-                       scheduler=scheduler)
+                       scheduler=scheduler, plan=plan)
 
     def serve(self, requests: Sequence[Union[Request, List[int]]],
               *, batch_slots: int = 4, max_len: int = 256,

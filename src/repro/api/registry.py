@@ -35,8 +35,10 @@ class Executor:
     caps: Capabilities = Capabilities()
 
     # ---- batched decode (serving) -------------------------------------
-    def make_decode_step(self, cfg, unroll: bool = False):
-        """-> step(params, state, tokens) -> (state', logits [B, Vpad])."""
+    def make_decode_step(self, cfg, unroll: bool = False, plan=None):
+        """-> step(params, state, tokens) -> (state', logits [B, Vpad]).
+        ``plan``: an optional shard.ShardingPlan the step must thread to
+        its projections (mesh sessions pass it; None = replicated)."""
         raise CapabilityError(
             f"backend {self.name!r} has no batched decode; use one of "
             f"{_REGISTRY.supporting('batched_decode')}")

@@ -28,12 +28,19 @@ prompt heads are prefilled once.
 Sessions are created by `repro.api.Engine.session()` (or directly); the
 compiled decode step comes from the engine's backend, so dense and
 compressed (Pallas) serving share one code path.
+
+Mesh serving: a ``plan`` (repro.shard.ShardingPlan, built by
+``Engine.session(mesh=...)``) makes the same session tensor-parallel —
+params are shard-padded and placed per the plan, KV pools shard their
+head axis, and the decode/prefill steps compile with explicit
+input/output shardings.  All host-side bookkeeping (page allocator,
+admission, preemption, prefix cache) is placement-agnostic and runs
+unchanged; ``plan=None`` is the exact pre-mesh single-device path.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-import os
 import time
 import warnings
 from typing import Deque, List, Optional, Sequence, Tuple
@@ -44,15 +51,17 @@ import numpy as np
 
 from repro import kvstore as kvs
 from repro import sched as schd
+from repro.api import env
 from repro.api.registry import Executor, get_backend
 from repro.configs.base import ArchConfig
 
-# env knobs resolved ONCE at import (traced code must not read os.environ);
-# per-session override via the kv_cache= / kv_dtype= constructor args.
-# "auto" resolves per-arch in resolve_kv_cache: paged for attention archs
-# (exact bf16 pages by default — int8 is the opt-in memory lever).
-KV_CACHE_DEFAULT = os.environ.get("REPRO_KV_CACHE", "auto")
-KV_DTYPE_DEFAULT = os.environ.get("REPRO_KV_DTYPE", "bf16")
+# env knobs resolved ONCE at import via repro.api.env (traced code must
+# not read os.environ); per-session override via the kv_cache= /
+# kv_dtype= constructor args.  "auto" resolves per-arch in
+# resolve_kv_cache: paged for attention archs (exact bf16 pages by
+# default — int8 is the opt-in memory lever).
+KV_CACHE_DEFAULT = env.KV_CACHE
+KV_DTYPE_DEFAULT = env.KV_DTYPE
 
 
 def resolve_kv_cache(kv_cache: Optional[str], cfg: ArchConfig) -> str:
@@ -67,13 +76,19 @@ def resolve_kv_cache(kv_cache: Optional[str], cfg: ArchConfig) -> str:
 # Compiled decode steps keyed by (backend, cfg): sessions on the same
 # config reuse one jitted step (its trace cache handles dense vs
 # compressed param structures), so spinning up a Session is cheap.
+# The decode state (argnum 1) is DONATED: every step consumes the state
+# it is handed and the caller keeps only the returned one — KV
+# pool/cache buffers are updated in place, never silently copied.
+# Mesh sessions compile per session instead (their in/out shardings
+# depend on the session's concrete param/state trees).
 _STEP_CACHE: dict = {}
 
 
 def _jitted_step(backend: Executor, cfg: ArchConfig):
     key = (backend.name, cfg)
     if key not in _STEP_CACHE:
-        _STEP_CACHE[key] = jax.jit(backend.make_decode_step(cfg))
+        _STEP_CACHE[key] = jax.jit(backend.make_decode_step(cfg),
+                                   donate_argnums=(1,))
     return _STEP_CACHE[key]
 
 
@@ -98,10 +113,19 @@ class Session:
                  kv_cache: Optional[str] = None, page_size: int = 16,
                  kv_pool_pages: Optional[int] = None,
                  kv_dtype: Optional[str] = None,
-                 scheduler=None):
+                 scheduler=None, plan=None):
         assert cfg.has_decode, "encoder archs don't serve autoregressively"
         from repro.models import model as M
         self.cfg, self.params = cfg, params
+        self.plan = plan
+        self._param_sh = None
+        if plan is not None:
+            # shard-aware stacking: compressed leaves are padded to the
+            # tp degree and placed per the plan; raw leaves get their
+            # Megatron TP shardings (replicated over data for serving)
+            from repro import shard as shardmod
+            self.params, self._param_sh = shardmod.prepare_params(
+                plan, cfg, params)
         self.slots = batch_slots
         self.max_len = max_len
         kv_cache = resolve_kv_cache(kv_cache, cfg)
@@ -146,9 +170,30 @@ class Session:
         if backend is None or isinstance(backend, str):
             backend = get_backend(backend or "jax-dense")
         self.backend = backend
-        self._step = _jitted_step(backend, cfg)
-        self._prefill = schd.make_prefill_step(cfg, self.chunk) \
-            if self.chunk > 1 else None
+        if plan is not None:
+            # mesh session: KV heads shard over the model axis, page
+            # table/pos replicate, and the step compiles with explicit
+            # input/output shardings so the donated state buffers keep
+            # their placement (no silent gathers/copies per step)
+            self._state_sh = plan.state_shardings(self.state)
+            self.state = jax.device_put(self.state, self._state_sh)
+            rep = plan.replicated()
+            step = backend.make_decode_step(cfg, plan=plan)
+            self._step = jax.jit(
+                step,
+                in_shardings=(self._param_sh, self._state_sh, rep),
+                out_shardings=(self._state_sh, rep),
+                donate_argnums=(1,))
+            self._prefill = schd.make_prefill_step(
+                cfg, self.chunk, plan=plan,
+                in_shardings=(self._param_sh, self._state_sh, rep, rep),
+                out_shardings=(self._state_sh, rep)) \
+                if self.chunk > 1 else None
+        else:
+            self._state_sh = None
+            self._step = _jitted_step(backend, cfg)
+            self._prefill = schd.make_prefill_step(cfg, self.chunk) \
+                if self.chunk > 1 else None
         # per-slot bookkeeping (host side)
         self.slot_entry: List[Optional[schd.SchedEntry]] = \
             [None] * batch_slots

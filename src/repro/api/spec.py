@@ -36,6 +36,12 @@ class CompressionSpec:
     #: finally wins vs the bf16-serving baseline; aida/int8/codebook4
     #: already store sub-f32 values, so they ignore this)
     dtype: str = "f32"
+    #: shard-aware stacking: pad each packed container's partition axis
+    #: (ACSR row blocks / output channels) to a multiple of this count,
+    #: so a `shard.ShardingPlan` with tp == shards partitions it with no
+    #: session-time re-stacking.  1 = no padding; plans also pad lazily,
+    #: so this is an encode-time optimization, not a requirement.
+    shards: int = 1
     overrides: Mapping[str, str] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
@@ -45,6 +51,9 @@ class CompressionSpec:
         if self.dtype not in ("f32", "bf16"):
             raise ValueError(
                 f"unknown value dtype {self.dtype!r}; 'f32' or 'bf16'")
+        if not isinstance(self.shards, int) or self.shards < 1:
+            raise ValueError(
+                f"shards must be a positive int, got {self.shards!r}")
         for name, mode in self.overrides.items():
             if mode not in MODES + ("skip",):
                 raise ValueError(

@@ -109,6 +109,14 @@ def compress(w: np.ndarray, mode: str = "aida", density: float = 0.10,
     raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
 
 
+def _fit_bias(bias: Optional[jnp.ndarray], rows: int):
+    """Row-padded containers (shard-aware stacking pads the output axis
+    to a multiple of the shard count) need the bias padded to match."""
+    if bias is not None and bias.shape[0] != rows:
+        bias = jnp.pad(bias, (0, rows - bias.shape[0]))
+    return bias
+
+
 def apply_fc(layer: CompressedFC, x: jnp.ndarray,
              bias: Optional[jnp.ndarray] = None,
              activation: Optional[str] = None) -> jnp.ndarray:
@@ -116,23 +124,35 @@ def apply_fc(layer: CompressedFC, x: jnp.ndarray,
 
     ``bias`` ([n_out]) and ``activation`` are fused into the kernel
     epilogues on the Pallas paths (no extra HBM round-trip for y).
+    Row-padded containers (see shard.partition / CompressionSpec.shards)
+    are handled transparently: padded rows compute nothing real and are
+    sliced off here, so ``y`` is always [B, layer.shape[0]].
     """
     squeeze = x.ndim == 1
     x2 = x[None, :] if squeeze else x
     if layer.mode == "dense":
         y = jnp.matmul(x2, layer.dense.T,
                        preferred_element_type=jnp.float32)
-        y = ops.bias_act_epilogue(y, bias, activation)
+        y = ops.bias_act_epilogue(y, _fit_bias(bias, y.shape[-1]),
+                                  activation)
     elif layer.mode == "int8":
-        y = ops.int8_matmul(x2, layer.qt, bias=bias, activation=activation)
+        y = ops.int8_matmul(x2, layer.qt,
+                            bias=_fit_bias(bias, layer.qt.q.shape[0]),
+                            activation=activation)
     elif layer.mode == "codebook4":
         y = ops.lut_matmul(x2, layer.codes_packed, layer.centroids,
-                           bias=bias, activation=activation)
+                           bias=_fit_bias(bias,
+                                          layer.codes_packed.shape[0]),
+                           activation=activation)
     elif layer.mode in ("acsr", "aida"):
-        y = ops.acsr_spmv(layer.blocked, x2.T, bias=bias,
+        y = ops.acsr_spmv(layer.blocked, x2.T,
+                          bias=_fit_bias(bias,
+                                         layer.blocked.values.shape[-1]
+                                         * layer.blocked.nblocks),
                           activation=activation).T
     else:
         raise ValueError(layer.mode)
+    y = y[:, : layer.shape[0]]
     return y[0] if squeeze else y
 
 

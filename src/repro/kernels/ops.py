@@ -9,12 +9,12 @@ lax.scan formulation (recurrences).
 from __future__ import annotations
 
 import functools
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import env
 from repro.kernels import ref as _ref
 from repro.kernels import flash_attention as _fa
 from repro.kernels import int8_matmul as _i8
@@ -25,9 +25,8 @@ from repro.kernels import tune as _tune
 
 
 def pallas_interpret() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
+    if env.PALLAS_INTERPRET is not None:
+        return env.PALLAS_INTERPRET
     return jax.default_backend() != "tpu"
 
 

@@ -26,11 +26,12 @@ does not retroactively change that step.
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.api import env
 
 Key = Tuple
 
@@ -74,7 +75,7 @@ def snapshot() -> dict:
 
 
 def enabled() -> bool:
-    return os.environ.get("REPRO_AUTOTUNE", "1") not in ("0", "false")
+    return env.AUTOTUNE
 
 
 # ------------------------------------------------------------------- keys

@@ -2,7 +2,7 @@
 device state (jax locks the device count on first backend init)."""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
@@ -12,6 +12,43 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_model: Optional[int] = None,
+                   n_data: Optional[int] = None):
+    """A (data, model) mesh sized from the devices actually present —
+    the mesh you can exercise on a laptop/CI host via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the
+    production mesh hard-assumes 256 chips and cannot).
+
+    With both degrees given they must multiply to ``jax.device_count()``;
+    with one given the other is inferred; with neither, every device
+    goes on the model axis (serving TP, the axis this repo shards
+    today).
+    """
+    n = jax.device_count()
+    for name, deg in (("n_model", n_model), ("n_data", n_data)):
+        if deg is not None and deg < 1:
+            raise ValueError(f"mesh degrees must be >= 1; got {name}={deg}")
+    if n_model is None and n_data is None:
+        n_model, n_data = n, 1
+    elif n_model is None:
+        if n % n_data:
+            raise ValueError(
+                f"n_data={n_data} does not divide device_count={n}")
+        n_model = n // n_data
+    elif n_data is None:
+        if n % n_model:
+            raise ValueError(
+                f"n_model={n_model} does not divide device_count={n}")
+        n_data = n // n_model
+    if n_model * n_data != n:
+        raise ValueError(
+            f"mesh {n_data}x{n_model} (data x model) needs "
+            f"{n_data * n_model} devices but jax.device_count()={n}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "accordingly BEFORE importing jax")
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
 def make_pp_mesh():

@@ -7,14 +7,55 @@ workloads driven by `repro.sched.workload`.
       --workload heterogeneous --chunk 8 --policy sjf
 (Full-size archs need a checkpoint; without one this initializes random
 weights at a REDUCED size for a functional smoke serve.)
+
+Mesh serving (tensor-parallel over an explicit ShardingPlan): ``--mesh
+MODELxDATA`` (e.g. ``--mesh 4x2``) builds a host mesh through
+`launch.mesh.make_host_mesh`; on a laptop/CI host export
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+
+def _parse_mesh(arg: str):
+    """"4" -> model=4; "4x2" -> model=4, data=2."""
+    parts = arg.lower().split("x")
+    try:
+        n_model = int(parts[0])
+        n_data = int(parts[1]) if len(parts) > 1 else None
+    except ValueError:
+        sys.exit(f"--mesh wants MODEL or MODELxDATA, got {arg!r}")
+    return n_model, n_data
+
+
+def _early_mesh_arg():
+    """--mesh must be seen BEFORE jax locks the device count on import."""
+    for i, arg in enumerate(sys.argv):
+        if arg == "--mesh" and i + 1 < len(sys.argv):
+            return sys.argv[i + 1]
+        if arg.startswith("--mesh="):
+            return arg.split("=", 1)[1]
+    return None
+
+
+# argv scan + XLA_FLAGS mutation ONLY when run as a program (python -m
+# repro.launch.serve): importing this module must never read argv, call
+# sys.exit, or change the process's jax device count.
+if __name__ == "__main__":
+    _mesh_arg = _early_mesh_arg()
+    if _mesh_arg is not None and "XLA_FLAGS" not in os.environ:
+        n_model, n_data = _parse_mesh(_mesh_arg)
+        n_dev = n_model * (n_data or 1)
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={n_dev}"
 
 from repro.api import CompressionSpec, Engine
 from repro.configs import get, reduced
+from repro.launch.mesh import make_host_mesh
 from repro.sched import SchedConfig, WorkloadSpec, generate, summarize
 from repro.sched.workload import PRESETS
 
@@ -51,7 +92,17 @@ def main():
     ap.add_argument("--kv-pool-pages", type=int, default=None,
                     help="page-pool size (small pools exercise admission "
                          "control + preemption instead of crashing)")
+    ap.add_argument("--mesh", default=None,
+                    help="tensor-parallel serving mesh, MODEL or "
+                         "MODELxDATA (e.g. 4x2); sized via "
+                         "launch.mesh.make_host_mesh")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh is not None:
+        n_model, n_data = _parse_mesh(args.mesh)
+        mesh = make_host_mesh(n_model=n_model, n_data=n_data)
+        print(f"[serve] mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     cfg = get(args.arch) if args.full_size else reduced(get(args.arch))
     if not cfg.has_decode:
@@ -78,7 +129,8 @@ def main():
                        kv_pool_pages=args.kv_pool_pages,
                        scheduler=SchedConfig(
                            policy=args.policy, chunk=args.chunk,
-                           prefix_cache=args.prefix_cache))
+                           prefix_cache=args.prefix_cache),
+                       mesh=mesh)
     print(f"[serve] workload={args.workload} seed={args.seed} "
           f"kv={sess.kv_cache} chunk={sess.chunk} policy={args.policy}")
     t0 = time.perf_counter()

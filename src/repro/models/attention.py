@@ -48,10 +48,10 @@ def _merge_heads(x):
     return x.transpose(0, 2, 1, 3).reshape(b, t, h * d)
 
 
-def _qkv(p, x, n_heads, n_kv, d_head, positions, theta):
-    q = dense(x, p["wq"], p.get("bq"))
-    k = dense(x, p["wk"], p.get("bk"))
-    v = dense(x, p["wv"], p.get("bv"))
+def _qkv(p, x, n_heads, n_kv, d_head, positions, theta, plan=None):
+    q = dense(x, p["wq"], p.get("bq"), plan=plan)
+    k = dense(x, p["wk"], p.get("bk"), plan=plan)
+    v = dense(x, p["wv"], p.get("bv"), plan=plan)
     q = _split_heads(q, n_heads, d_head)
     k = _split_heads(k, n_kv, d_head)
     v = _split_heads(v, n_kv, d_head)
@@ -165,14 +165,16 @@ def decode_attend(cache: kvc.KVCache, q, k, v, cur_pos, *, window,
 
 def decode_attend_paged(pool: kvs.PagedKV, table, q, k, v, cur_pos, *,
                         window, cap: Optional[float] = None,
-                        scale: float = 1.0):
+                        scale: float = 1.0, impl: Optional[str] = None):
     """Paged counterpart of decode_attend: quantize-into-page update +
-    page-gather attention (q/k/v are [B, H(kv), 1, Dh] as from _qkv)."""
+    page-gather attention (q/k/v are [B, H(kv), 1, Dh] as from _qkv).
+    ``impl`` overrides the tuner's kernel choice (the mesh-sharded path
+    forces the XLA gather so GSPMD can partition heads)."""
     pool = kvs.update(pool, table, k[:, :, 0].astype(jnp.float32),
                       v[:, :, 0].astype(jnp.float32), cur_pos)
     o = kvs.paged_attention(q[:, :, 0], pool, table, cur_pos,
                             jnp.asarray(window, jnp.int32),
-                            scale=scale, cap=cap)
+                            scale=scale, cap=cap, impl=impl)
     return pool, o[:, :, None, :]
 
 
@@ -180,29 +182,38 @@ def attn_decode(p, cache: kvc.KVCache, x, cur_pos, *, n_heads: int,
                 n_kv: int, d_head: int, window, ring: bool = False,
                 cap: Optional[float] = None,
                 theta: Optional[float] = 10000.0,
-                scale: Optional[float] = None):
+                scale: Optional[float] = None, plan=None):
     """One-token decode. x [B,1,D], cur_pos [B] absolute position."""
     scale = (d_head ** -0.5) if scale is None else scale
-    q, k, v = _qkv(p, x, n_heads, n_kv, d_head, cur_pos[:, None], theta)
+    q, k, v = _qkv(p, x, n_heads, n_kv, d_head, cur_pos[:, None], theta,
+                   plan=plan)
     cache, o = decode_attend(cache, q, k, v, cur_pos, window=window,
                              ring=ring, cap=cap, scale=scale)
-    return cache, dense(_merge_heads(o.astype(COMPUTE_DTYPE)), p["wo"])
+    return cache, dense(_merge_heads(o.astype(COMPUTE_DTYPE)), p["wo"],
+                        plan=plan)
 
 
 def attn_decode_paged(p, pool: kvs.PagedKV, table, x, cur_pos, *,
                       n_heads: int, n_kv: int, d_head: int, window,
                       cap: Optional[float] = None,
                       theta: Optional[float] = 10000.0,
-                      scale: Optional[float] = None):
+                      scale: Optional[float] = None, plan=None):
     """One-token decode against the paged KV pool (cache="paged" route).
 
     The current token's k/v are quantized into their page first, then the
     paged-attention kernel attends over the sequence's page table — same
     write-then-attend semantics as attn_decode, O(used pages) memory.
     Windowing is mask-only here; page reclamation behind an SWA window is
-    the Session's host-side job (kvstore.reclaimable_prefix)."""
+    the Session's host-side job (kvstore.reclaimable_prefix).  Under a
+    sharding plan the XLA gather path is forced (heads partition over
+    the model axis via GSPMD; the Pallas kernel has no partitioning
+    rule outside shard_map)."""
     scale = (d_head ** -0.5) if scale is None else scale
-    q, k, v = _qkv(p, x, n_heads, n_kv, d_head, cur_pos[:, None], theta)
+    q, k, v = _qkv(p, x, n_heads, n_kv, d_head, cur_pos[:, None], theta,
+                   plan=plan)
+    force_xla = plan is not None and plan.tp > 1
     pool, o = decode_attend_paged(pool, table, q, k, v, cur_pos,
-                                  window=window, cap=cap, scale=scale)
-    return pool, dense(_merge_heads(o.astype(COMPUTE_DTYPE)), p["wo"])
+                                  window=window, cap=cap, scale=scale,
+                                  impl="xla" if force_xla else None)
+    return pool, dense(_merge_heads(o.astype(COMPUTE_DTYPE)), p["wo"],
+                       plan=plan)

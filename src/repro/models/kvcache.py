@@ -9,17 +9,18 @@ position deltas).
 """
 from __future__ import annotations
 
-import os
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-#: update strategy, resolved ONCE at import — update() runs inside traced
-#: decode steps, where a per-call os.environ read is pure host overhead
-#: (and useless: the trace bakes in whatever value the first call saw).
-#: Override per call with update(..., strategy=...).
-KV_UPDATE_DEFAULT = os.environ.get("REPRO_KV_UPDATE", "scatter")
+from repro.api import env
+
+#: update strategy, resolved ONCE at import (repro.api.env) — update()
+#: runs inside traced decode steps, where a per-call os.environ read is
+#: pure host overhead (and useless: the trace bakes in whatever value the
+#: first call saw).  Override per call with update(..., strategy=...).
+KV_UPDATE_DEFAULT = env.KV_UPDATE
 
 
 class KVCache(NamedTuple):

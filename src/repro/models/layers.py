@@ -6,13 +6,13 @@ mixed-precision policy: params f32, matmul compute bf16, norms/softmax f32.
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.api import dispatch as _dispatch
+from repro.api import env as _env
 
 COMPUTE_DTYPE = jnp.bfloat16
 
@@ -22,8 +22,7 @@ def _matmul_out_dtype():
     in bf16 (half the all-reduce wire bytes).  MXU accumulation is f32
     internally either way; only the psum payload narrows.  Enabled with
     REPRO_BF16_PSUM=1 (measured in the hillclimb; see EXPERIMENTS §Perf)."""
-    return COMPUTE_DTYPE if os.environ.get("REPRO_BF16_PSUM") == "1" \
-        else jnp.float32
+    return COMPUTE_DTYPE if _env.BF16_PSUM else jnp.float32
 
 
 def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
@@ -31,7 +30,7 @@ def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
     return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
 
 
-def dense(x, w, bias=None, activation=None):
+def dense(x, w, bias=None, activation=None, plan=None):
     """act(x @ w + bias).  ``w`` may be a raw [d_in, d_out] matrix OR any
     compressed leaf registered with repro.api.dispatch (e.g. a
     core.sparse_fc.CompressedFC, the AIDA serving mode) — compression is
@@ -39,12 +38,26 @@ def dense(x, w, bias=None, activation=None):
 
     For compressed leaves, bias and activation ride into the kernel
     epilogue (one fused pass, no extra HBM round-trip); the raw-matmul
-    path keeps the historical op order bit-for-bit."""
+    path keeps the historical op order bit-for-bit.
+
+    ``plan`` (a shard.ShardingPlan) routes compressed leaves through the
+    shard-local tensor-parallel apply — each mesh shard runs its band of
+    the compressed matrix through the same kernels (raw matrices are
+    GSPMD-partitioned by the plan's param shardings instead, so they
+    ignore ``plan`` here)."""
     apply = _dispatch.applier_for(w)
     if apply is not None:
         lead = x.shape[:-1]
-        y = apply(w, x.reshape(-1, x.shape[-1]).astype(jnp.float32),
-                  bias=bias, activation=activation)
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        y = None
+        if plan is not None:
+            from repro.core.sparse_fc import CompressedFC
+            from repro.shard import apply_fc_sharded
+            if isinstance(w, CompressedFC):
+                y = apply_fc_sharded(plan, w, x2, bias=bias,
+                                     activation=activation)
+        if y is None:
+            y = apply(w, x2, bias=bias, activation=activation)
         return y.reshape(*lead, y.shape[-1]).astype(COMPUTE_DTYPE)
     y = jnp.matmul(x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE),
                    preferred_element_type=_matmul_out_dtype())
@@ -113,13 +126,14 @@ def _act(name: str, x):
     raise ValueError(name)
 
 
-def mlp(x, p, act: str = "silu"):
+def mlp(x, p, act: str = "silu", plan=None):
     if "gate" in p:
         # activation fuses into the gate projection's kernel epilogue
-        up = dense(x, p["gate"], activation=act) * dense(x, p["up"])
+        up = dense(x, p["gate"], activation=act, plan=plan) \
+            * dense(x, p["up"], plan=plan)
     else:
-        up = dense(x, p["up"], activation=act)
-    return dense(up, p["down"])
+        up = dense(x, p["up"], activation=act, plan=plan)
+    return dense(up, p["down"], plan=plan)
 
 
 # --------------------------------------------------------------- embedding

@@ -268,16 +268,17 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
 
 
 def decode_step(cfg: ArchConfig, params: Dict, state: Dict,
-                tokens: jnp.ndarray,
-                unroll: bool = False) -> Tuple[Dict, jnp.ndarray]:
-    """tokens [B] -> (state', logits [B, Vpad])."""
+                tokens: jnp.ndarray, unroll: bool = False,
+                plan=None) -> Tuple[Dict, jnp.ndarray]:
+    """tokens [B] -> (state', logits [B, Vpad]).  ``plan`` = the serving
+    ShardingPlan threaded down to every projection (None = replicated)."""
     x = embed(tokens[:, None], params["embed"])
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, COMPUTE_DTYPE)
     table = state.get("page_table")        # paged route (static branch)
     new_layers, x = tfm.stack_decode(cfg, params["layers"], state["layers"],
                                      x, state["pos"], unroll=unroll,
-                                     page_table=table)
+                                     page_table=table, plan=plan)
     x = _norm(cfg)(x, params["final_norm"])
     if cfg.tie_embeddings:
         logits = unembed(x, params["embed"])

@@ -182,8 +182,11 @@ def init_stack_state(cfg: ArchConfig, batch: int, slots_full: int,
 
 
 def block_decode(cfg: ArchConfig, p: Dict, st: Dict, x, cur_pos, window,
-                 page_table=None):
-    """One layer, one token. x [B,1,D]."""
+                 page_table=None, plan=None):
+    """One layer, one token. x [B,1,D].  ``plan`` (shard.ShardingPlan)
+    threads through to every projection so compressed FC runs
+    shard-local tensor-parallel; None = the replicated single-device
+    path, byte-identical to before."""
     nrm = _norm(cfg)
     if cfg.family == "rwkv6":
         tm_st = {"prev": st["tm_prev"], "S": st["S"]}
@@ -199,12 +202,12 @@ def block_decode(cfg: ArchConfig, p: Dict, st: Dict, x, cur_pos, window,
     if page_table is not None:
         cache, h = attn.attn_decode_paged(p["attn"], st["kv"], page_table,
                                           nrm(x, p["ln1"]), cur_pos,
-                                          window=window,
+                                          window=window, plan=plan,
                                           **_attn_kwargs(cfg))
     else:
         cache, h = attn.attn_decode(p["attn"], st["kv"], nrm(x, p["ln1"]),
                                     cur_pos, window=window,
-                                    ring=not _any_global(cfg),
+                                    ring=not _any_global(cfg), plan=plan,
                                     **_attn_kwargs(cfg))
     new_st = dict(st)
     new_st["kv"] = cache
@@ -222,20 +225,20 @@ def block_decode(cfg: ArchConfig, p: Dict, st: Dict, x, cur_pos, window,
             top_k=cfg.moe.top_k, group_size=cfg.moe.group_size,
             capacity_factor=cfg.moe.capacity_factor)
     else:
-        h = mlp(nrm(x, p["ln2"]), p["mlp"], cfg.act)
+        h = mlp(nrm(x, p["ln2"]), p["mlp"], cfg.act, plan=plan)
     if cfg.post_norms:
         h = nrm(h, p["ln2p"])
     return new_st, x + h
 
 
 def stack_decode(cfg: ArchConfig, stacked: Dict, states, x, cur_pos,
-                 unroll: bool = False, page_table=None):
+                 unroll: bool = False, page_table=None, plan=None):
     windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
 
     def body(xc, inp):
         p, st, win = inp
         new_st, xo = block_decode(cfg, p, st, xc, cur_pos, win,
-                                  page_table=page_table)
+                                  page_table=page_table, plan=plan)
         return xo, new_st
 
     x, new_states = jax.lax.scan(body, x, (stacked, states, windows),

@@ -48,14 +48,15 @@ def supports_chunked_prefill(cfg: ArchConfig) -> bool:
 
 
 def _block_prefill(cfg: ArchConfig, p: Dict, st: Dict, x, positions,
-                   valid, window, table):
+                   valid, window, table, plan=None):
     """One layer over a [B, C, D] chunk: write C tokens' K/V into pages,
     then attend all C queries over the (now-updated) page table."""
     nrm = _norm(cfg)
     scale = (cfg.head_dim ** -0.5) if cfg.attn_scale is None \
         else cfg.attn_scale
     q, k, v = attn._qkv(p["attn"], nrm(x, p["ln1"]), cfg.n_heads,
-                        cfg.n_kv, cfg.head_dim, positions, cfg.rope_theta)
+                        cfg.n_kv, cfg.head_dim, positions, cfg.rope_theta,
+                        plan=plan)
     pool = st["kv"]
 
     def write(pl_, j):
@@ -69,7 +70,7 @@ def _block_prefill(cfg: ArchConfig, p: Dict, st: Dict, x, positions,
                                       jnp.asarray(window, jnp.int32),
                                       scale=scale, cap=cfg.attn_softcap)
     h = attn.dense(attn._merge_heads(o.astype(COMPUTE_DTYPE)),
-                   p["attn"]["wo"])
+                   p["attn"]["wo"], plan=plan)
     new_st = dict(st)
     new_st["kv"] = pool
     if cfg.post_norms:
@@ -81,20 +82,20 @@ def _block_prefill(cfg: ArchConfig, p: Dict, st: Dict, x, positions,
             top_k=cfg.moe.top_k, group_size=cfg.moe.group_size,
             capacity_factor=cfg.moe.capacity_factor)
     else:
-        h = mlp(nrm(x, p["ln2"]), p["mlp"], cfg.act)
+        h = mlp(nrm(x, p["ln2"]), p["mlp"], cfg.act, plan=plan)
     if cfg.post_norms:
         h = nrm(h, p["ln2p"])
     return new_st, x + h
 
 
 def _stack_prefill(cfg: ArchConfig, stacked: Dict, states, x, positions,
-                   valid, table):
+                   valid, table, plan=None):
     windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
 
     def body(xc, inp):
         p, st, win = inp
         new_st, xo = _block_prefill(cfg, p, st, xc, positions, valid, win,
-                                    table)
+                                    table, plan=plan)
         return xo, new_st
 
     x, new_states = jax.lax.scan(body, x, (stacked, states, windows))
@@ -102,13 +103,14 @@ def _stack_prefill(cfg: ArchConfig, stacked: Dict, states, x, positions,
 
 
 def prefill_step(cfg: ArchConfig, params: Dict, state: Dict,
-                 tokens: jnp.ndarray,
-                 n_tok: jnp.ndarray) -> Tuple[Dict, jnp.ndarray]:
+                 tokens: jnp.ndarray, n_tok: jnp.ndarray,
+                 plan=None) -> Tuple[Dict, jnp.ndarray]:
     """tokens [B, C], n_tok [B] (0 = idle slot) -> (state', logits
     [B, C, Vpad]).  Slot i's tokens occupy absolute positions
     ``state["pos"][i] .. +n_tok[i]-1``; the caller ensures those
     positions' pages exist in the table and samples from
-    ``logits[i, n_tok[i]-1]``."""
+    ``logits[i, n_tok[i]-1]``.  ``plan`` = serving ShardingPlan (the
+    chunk step stays token-identical under it — see tests/test_shard)."""
     if not supports_chunked_prefill(cfg):
         raise ValueError(f"{cfg.name} ({cfg.family}) has per-token "
                          "recurrent state; chunked prefill unsupported")
@@ -124,7 +126,7 @@ def prefill_step(cfg: ArchConfig, params: Dict, state: Dict,
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, COMPUTE_DTYPE)
     new_layers, x = _stack_prefill(cfg, params["layers"], state["layers"],
-                                   x, positions, valid, table)
+                                   x, positions, valid, table, plan=plan)
     x = _norm(cfg)(x, params["final_norm"])
     if cfg.tie_embeddings:
         logits = unembed(x, params["embed"])
@@ -143,11 +145,28 @@ def prefill_step(cfg: ArchConfig, params: Dict, state: Dict,
 _PREFILL_CACHE: dict = {}
 
 
-def make_prefill_step(cfg: ArchConfig, chunk: int):
-    """The jitted [B, chunk] prefill step for ``cfg`` (cached)."""
+def make_prefill_step(cfg: ArchConfig, chunk: int, plan=None,
+                      in_shardings=None, out_shardings=None):
+    """The jitted [B, chunk] prefill step for ``cfg``.
+
+    The decode state (argnum 1) is DONATED — same contract as the
+    Session's decode step, so the (possibly sharded) KV pool buffers are
+    reused in place instead of silently copied every chunk.  Callers
+    must treat the state they pass in as consumed.
+
+    plan=None steps are cached per (cfg, chunk); mesh steps compile per
+    session because their in/out shardings depend on the session's
+    concrete param/state trees."""
+    if plan is not None:
+        return jax.jit(
+            lambda params, state, tokens, n_tok:
+            prefill_step(cfg, params, state, tokens, n_tok, plan=plan),
+            in_shardings=in_shardings, out_shardings=out_shardings,
+            donate_argnums=(1,))
     key = (cfg, chunk)
     if key not in _PREFILL_CACHE:
         _PREFILL_CACHE[key] = jax.jit(
             lambda params, state, tokens, n_tok:
-            prefill_step(cfg, params, state, tokens, n_tok))
+            prefill_step(cfg, params, state, tokens, n_tok),
+            donate_argnums=(1,))
     return _PREFILL_CACHE[key]

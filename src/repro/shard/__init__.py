@@ -1,0 +1,30 @@
+"""`repro.shard` — explicit sharding plans for the serving stack.
+
+The AIDA scaling story is partitioning FC weight matrices across many
+associative-memory ICs that compute shard-locally and in parallel (EIE
+distributes its CSC-interleaved matrix across PEs the same way).  This
+package is that idea applied to the serving stack: a `ShardingPlan`
+built from a mesh + model config assigns a `NamedSharding` to every
+param / decode-state / KV leaf, decides the gather-vs-psum combine
+policy per compressed mode, and drives shard-local compressed SpMV
+through `shard_map` so tensor-parallel FC is real per-device kernel
+work, not GSPMD replication.
+
+* `plan`      — ShardingPlan: per-leaf NamedShardings, combine policy
+* `partition` — shard-aware re-stacking / per-shard padding of
+                compressed containers, param placement, local views
+* `apply`     — shard-local compressed FC (`shard_map` SpMV + combine)
+
+`Engine.session(mesh=...)` builds a plan and threads it through
+`models/{layers,attention,transformer}` and `sched.prefill`; with no
+mesh every entry point behaves exactly as before (plan=None).
+"""
+from repro.shard.apply import apply_fc_sharded
+from repro.shard.partition import (local_view, pad_params_for_plan,
+                                   prepare_params, tune_local_views)
+from repro.shard.plan import ShardingPlan, make_plan
+
+__all__ = [
+    "ShardingPlan", "apply_fc_sharded", "local_view", "make_plan",
+    "pad_params_for_plan", "prepare_params", "tune_local_views",
+]

@@ -1,0 +1,135 @@
+"""Shard-local compressed FC: the paper's multi-IC partitioning, executed.
+
+`apply_fc_sharded` runs one compressed projection tensor-parallel over
+the plan's model axis via `shard_map`: every shard holds a band of the
+compressed matrix (a contiguous run of ACSR row blocks, or of
+int8/codebook output channels) and runs the *existing* kernel —
+Pallas fused SpMV, int8, LUT — on its local band only.  Combine policy:
+
+* ``"gather"`` (default, every mode): row partitioning.  Each output
+  element is produced entirely on one shard (identical arithmetic to
+  the single-device kernel, so results are bit-identical), and the
+  shard outputs concatenate along the feature axis — the all-gather is
+  materialized lazily by GSPMD only where a consumer needs the full
+  vector.
+* ``"psum"`` (int8 only): input partitioning.  Shards hold a band of
+  *columns*, contract against their slice of the activation, and
+  all-reduce partial sums; the per-channel dequant scale + bias/act
+  epilogue runs once on the reduced result.  ACSR modes cannot split
+  columns (col_idx addresses the full input vector), which is why
+  gather is the default policy everywhere.
+
+Leaves whose partition axis does not divide the tp degree fall back to
+the plain (replicated) apply — `partition.pad_params_for_plan` exists
+so that fallback never triggers for plan-prepared params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sparse_fc as sfc
+from repro.kernels import ops
+from repro.shard import partition
+
+
+def _local_layer(leaf: sfc.CompressedFC) -> sfc.CompressedFC:
+    """Rebuild a CompressedFC whose static ``shape`` matches the local
+    array shards shard_map handed us (the pytree aux still carries the
+    global shape)."""
+    n_in = leaf.shape[1]
+    if leaf.mode in ("acsr", "aida"):
+        b = leaf.blocked
+        rows = b.values.shape[0] * b.block_rows
+        blocked = dataclasses.replace(b, shape=(rows, n_in))
+        return dataclasses.replace(leaf, blocked=blocked,
+                                   shape=(rows, n_in))
+    rows = partition.row_axis_len(leaf)
+    return dataclasses.replace(leaf, shape=(rows, n_in))
+
+
+def _row_specs(leaf: sfc.CompressedFC, tp_axis: str) -> sfc.CompressedFC:
+    """shard_map in_specs for a single-layer leaf, row-partitioned."""
+    from repro.core import quant as q
+    from repro.kernels import acsr_spmv as sp
+    if leaf.mode in ("acsr", "aida"):
+        b = leaf.blocked
+        blocked = sp.BlockedACSR(
+            values=P(tp_axis, None, None), col_idx=P(tp_axis, None, None),
+            row_nnz=P(tp_axis, None), shape=b.shape,
+            block_rows=b.block_rows, nnz=b.nnz,
+            centroids=None if b.centroids is None else P())
+        return sfc.CompressedFC(leaf.mode, leaf.shape, blocked=blocked)
+    if leaf.mode == "int8":
+        qt = q.QTensor(q=P(tp_axis, None), scale=P(tp_axis, None),
+                       bits=leaf.qt.bits)
+        return sfc.CompressedFC(leaf.mode, leaf.shape, qt=qt)
+    if leaf.mode == "codebook4":
+        return sfc.CompressedFC(leaf.mode, leaf.shape,
+                                codes_packed=P(tp_axis, None),
+                                centroids=P())
+    return sfc.CompressedFC(leaf.mode, leaf.shape, dense=P(tp_axis, None))
+
+
+def _padded_rows(leaf: sfc.CompressedFC) -> int:
+    if leaf.mode in ("acsr", "aida"):
+        return leaf.blocked.values.shape[-3] * leaf.blocked.block_rows
+    return partition.row_axis_len(leaf)
+
+
+def apply_fc_sharded(plan, layer: sfc.CompressedFC, x: jnp.ndarray,
+                     bias: Optional[jnp.ndarray] = None,
+                     activation: Optional[str] = None) -> jnp.ndarray:
+    """y = act(x @ W.T + bias) for a single-layer compressed leaf,
+    computed shard-locally over ``plan``'s model axis.  x: [B, n_in]."""
+    tp, ax = plan.tp, plan.tp_axis
+    n_out = layer.shape[0]
+    if tp == 1 or not partition.shardable(layer, tp):
+        return sfc.apply_fc(layer, x, bias=bias, activation=activation)
+    policy = plan.policy_for(layer.mode)
+
+    if policy == "psum" and layer.mode == "int8" \
+            and layer.shape[1] % tp == 0:
+        def local_psum(q_band, x_band):
+            acc = jnp.matmul(x_band, q_band.astype(jnp.float32).T,
+                             preferred_element_type=jnp.float32)
+            return jax.lax.psum(acc, ax)
+
+        acc = shard_map(local_psum, mesh=plan.mesh,
+                        in_specs=(P(None, ax), P(None, ax)),
+                        out_specs=P(None, None),
+                        check_rep=False)(layer.qt.q, x)
+        # slice padded rows off BEFORE the epilogue: bias carries the
+        # true n_out, the padded q/scale rows are inert
+        y = acc[:, :n_out] * layer.qt.scale.reshape(1, -1)[:, :n_out]
+        return ops.bias_act_epilogue(y, bias, activation)
+
+    # ------------------------------------------------ gather (default)
+    rows_pad = _padded_rows(layer)
+    bias_p = None
+    if bias is not None:
+        bias_p = jnp.pad(bias.astype(jnp.float32),
+                         (0, rows_pad - bias.shape[0]))
+
+    if bias_p is None:
+        def local(lay, xx):
+            return sfc.apply_fc(_local_layer(lay), xx,
+                                activation=activation)
+        y = shard_map(local, mesh=plan.mesh,
+                      in_specs=(_row_specs(layer, ax), P(None, None)),
+                      out_specs=P(None, ax), check_rep=False)(layer, x)
+    else:
+        def local(lay, xx, bb):
+            return sfc.apply_fc(_local_layer(lay), xx, bias=bb,
+                                activation=activation)
+        y = shard_map(local, mesh=plan.mesh,
+                      in_specs=(_row_specs(layer, ax), P(None, None),
+                                P(ax)),
+                      out_specs=P(None, ax),
+                      check_rep=False)(layer, x, bias_p)
+    return y[:, :n_out]

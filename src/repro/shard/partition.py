@@ -1,0 +1,159 @@
+"""Shard-aware re-stacking of compressed containers + param placement.
+
+Row-partitioning a compressed FC over ``tp`` shards needs the row axis to
+divide evenly: BlockedACSR splits on its row-*block* axis (each shard
+gets a contiguous band of blocks = a band of output rows, the per-IC
+matrix partitioning of the paper), int8/codebook4/dense split on their
+output-channel axis.  `pad_params_for_plan` appends empty row
+blocks / zero rows so every compressed leaf divides — "per-shard
+padding": padded rows have ``row_nnz == 0`` (acsr/aida) or zero
+codes/scales, compute nothing real, and are sliced off after the shard
+outputs are gathered (``CompressedFC.shape`` keeps the true row count).
+
+`prepare_params` = pad + `jax.device_put` onto the plan's NamedShardings;
+`local_view` builds the single-shard view of a stacked leaf so the
+kernel autotuner can tune the geometry the shard-local SpMV will
+actually run (`tune_local_views`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as q
+from repro.core import sparse_fc as sfc
+from repro.kernels import acsr_spmv as sp
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def row_axis_len(leaf: sfc.CompressedFC) -> int:
+    """Length of the axis the plan partitions (row blocks for acsr/aida,
+    output channels otherwise) on a stacked or single-layer leaf."""
+    if leaf.mode in ("acsr", "aida"):
+        return leaf.blocked.values.shape[-3]      # nblocks
+    if leaf.mode == "int8":
+        return leaf.qt.q.shape[-2]
+    if leaf.mode == "codebook4":
+        return leaf.codes_packed.shape[-2]
+    return leaf.dense.shape[-2]
+
+
+def shardable(leaf: sfc.CompressedFC, tp: int) -> bool:
+    return tp > 1 and row_axis_len(leaf) % tp == 0
+
+
+def pad_leaf(leaf: sfc.CompressedFC, tp: int) -> sfc.CompressedFC:
+    """Pad the partition axis of one compressed leaf to a multiple of
+    ``tp`` (no-op when it already divides).  Works on stacked ([L, ...])
+    and single-layer leaves; the aux ``shape`` keeps the true row count,
+    so downstream slicing stays correct."""
+    n = row_axis_len(leaf)
+    pad = _ceil_to(n, tp) - n
+    if pad == 0:
+        return leaf
+
+    def pad_rows(x, axis):
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths)
+
+    if leaf.mode in ("acsr", "aida"):
+        b = leaf.blocked
+        blocked = dataclasses.replace(
+            b, values=pad_rows(b.values, b.values.ndim - 3),
+            col_idx=pad_rows(b.col_idx, b.col_idx.ndim - 3),
+            row_nnz=pad_rows(b.row_nnz, b.row_nnz.ndim - 2))
+        return dataclasses.replace(leaf, blocked=blocked)
+    if leaf.mode == "int8":
+        qt = q.QTensor(q=pad_rows(leaf.qt.q, leaf.qt.q.ndim - 2),
+                       scale=pad_rows(leaf.qt.scale,
+                                      leaf.qt.scale.ndim - 2),
+                       bits=leaf.qt.bits)
+        return dataclasses.replace(leaf, qt=qt)
+    if leaf.mode == "codebook4":
+        return dataclasses.replace(
+            leaf, codes_packed=pad_rows(leaf.codes_packed,
+                                        leaf.codes_packed.ndim - 2))
+    return dataclasses.replace(
+        leaf, dense=pad_rows(leaf.dense, leaf.dense.ndim - 2))
+
+
+def pad_params_for_plan(plan, params: Dict) -> Dict:
+    """Pad every compressed leaf's partition axis to a multiple of the
+    plan's tp degree.  Raw arrays pass through untouched (GSPMD handles
+    or replicates them per the plan's fit rule)."""
+    def visit(leaf):
+        if isinstance(leaf, sfc.CompressedFC) and plan.tp > 1:
+            return pad_leaf(leaf, plan.tp)
+        return leaf
+    return jax.tree.map(visit, params,
+                        is_leaf=lambda x: isinstance(x, sfc.CompressedFC))
+
+
+def prepare_params(plan, cfg, params: Dict) -> Tuple[Dict, object]:
+    """(padded, device_put) params for a plan.  Returns (params,
+    shardings) — the shardings tree doubles as the step's in_shardings."""
+    padded = pad_params_for_plan(plan, params)
+    shardings = plan.param_shardings(cfg, padded)
+    return jax.device_put(padded, shardings), shardings
+
+
+# --------------------------------------------------------------- tuning
+def local_view(leaf: sfc.CompressedFC, tp: int,
+               shard: int = 0) -> sfc.CompressedFC:
+    """The single-layer, single-shard view of a (stacked) compressed
+    leaf — the exact geometry `shard.apply` runs inside shard_map, so
+    tuning this view caches winners under the keys the sharded step
+    will look up at trace time."""
+    from repro.kernels import tune
+    lay = tune._layer0_view(pad_leaf(leaf, tp))
+    n = row_axis_len(lay) // tp
+    lo = shard * n
+
+    def rows(x, axis):
+        return jax.lax.slice_in_dim(x, lo, lo + n, axis=axis)
+
+    if lay.mode in ("acsr", "aida"):
+        b = lay.blocked
+        blocked = dataclasses.replace(
+            b, values=rows(b.values, 0), col_idx=rows(b.col_idx, 0),
+            row_nnz=rows(b.row_nnz, 0),
+            shape=(n * b.block_rows, b.shape[1]))
+        return dataclasses.replace(lay, blocked=blocked,
+                                   shape=(n * b.block_rows, lay.shape[1]))
+    if lay.mode == "int8":
+        qt = q.QTensor(q=rows(lay.qt.q, 0), scale=rows(lay.qt.scale, 0),
+                       bits=lay.qt.bits)
+        return dataclasses.replace(lay, qt=qt, shape=(n, lay.shape[1]))
+    if lay.mode == "codebook4":
+        return dataclasses.replace(lay, codes_packed=rows(
+            lay.codes_packed, 0), shape=(n, lay.shape[1]))
+    return dataclasses.replace(lay, dense=rows(lay.dense, 0),
+                               shape=(n, lay.shape[1]))
+
+
+def tune_local_views(params: Dict, plan, batch: int,
+                     interpret: bool) -> int:
+    """Autotune every unique *shard-local* compressed geometry, so the
+    dispatch inside the sharded decode step finds winners at trace time
+    (the global-geometry cache entries do not match local shapes)."""
+    from repro.kernels import tune
+    tuned = 0
+
+    def visit(leaf):
+        nonlocal tuned
+        if isinstance(leaf, sfc.CompressedFC) and leaf.mode != "dense" \
+                and plan.tp > 1:
+            tune.tune_layer(local_view(leaf, plan.tp), batch, interpret)
+            tuned += 1
+        return leaf
+
+    jax.tree.map(visit, params,
+                 is_leaf=lambda x: isinstance(x, sfc.CompressedFC))
+    return tuned

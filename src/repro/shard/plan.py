@@ -1,0 +1,217 @@
+"""ShardingPlan — one object that knows where every serving leaf lives.
+
+A plan is built from a mesh + model config (`make_plan`) and owns three
+decisions the serving stack used to hard-code as "everything replicated,
+one device":
+
+1. **Param placement** (`param_shardings`): tensor-parallel specs for
+   every param leaf, *including compressed containers* — a BlockedACSR
+   shards its row-block axis over the model axis (each shard owns a
+   contiguous band of output rows, exactly the paper's per-IC matrix
+   partitioning), int8/codebook4 shard their output-channel axis (the
+   per-row quant scales ride along), norms/biases replicate.  Raw
+   (uncompressed) matrices reuse the training-path Megatron specs from
+   `models.model._layer_specs` with FSDP turned off (serving replicates
+   over the data axis; data-parallel batch slots are the next PR).
+
+2. **State placement** (`state_shardings`): KV pools (paged or dense)
+   shard their *head* axis over the model axis — the same devices that
+   own a head's wq/wk/wv columns own its cache — while the page table,
+   positions and per-slot recurrent state replicate (host-side page
+   allocation keeps writing the table with plain `.at[]` updates).
+
+3. **Combine policy** (`policy_for`): per compressed mode, how shard
+   partials become the global activation — ``"gather"`` (row/output
+   partitioning: every output element is computed entirely on one
+   shard, so results are bit-identical to single-device) or ``"psum"``
+   (input partitioning: shard-local partial products all-reduced).
+   Row partitioning is the default everywhere because ACSR column
+   indices address the full input vector — it is also what keeps the
+   mesh path token-identical.
+
+Plans are frozen/hashable so they can key step caches and be closed
+over by jitted decode steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+#: default combine policy per compressed mode ("gather" = row-partitioned
+#: shard-local output bands; "psum" = input-partitioned partial sums)
+DEFAULT_POLICY: Tuple[Tuple[str, str], ...] = (
+    ("dense", "gather"), ("int8", "gather"), ("codebook4", "gather"),
+    ("acsr", "gather"), ("aida", "gather"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+    tp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ("data",)
+    policy: Tuple[Tuple[str, str], ...] = DEFAULT_POLICY
+
+    # ------------------------------------------------------------ basics
+    @property
+    def tp(self) -> int:
+        """Model-parallel degree."""
+        return int(self.mesh.shape[self.tp_axis])
+
+    @property
+    def dp(self) -> int:
+        out = 1
+        for a in self.dp_axes:
+            if a in self.mesh.axis_names:
+                out *= int(self.mesh.shape[a])
+        return out
+
+    def policy_for(self, mode: str) -> str:
+        return dict(self.policy).get(mode, "gather")
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # ----------------------------------------------------------- fitting
+    def _axis_size(self, entry) -> int:
+        if entry is None:
+            return 1
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        out = 1
+        for a in axes:
+            out *= int(self.mesh.shape[a])
+        return out
+
+    def fit(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Drop sharded axes that do not divide the actual dim — a leaf
+        whose head/row count is not a multiple of the mesh degree
+        replicates instead of erroring (padding is partition.py's job
+        for the leaves where it pays)."""
+        if spec is None:
+            return P()
+        ents = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+        out = []
+        for dim, entry in zip(shape, ents):
+            size = self._axis_size(entry)
+            out.append(entry if (size > 1 and dim % size == 0) or size == 1
+                       else None)
+        return P(*out)
+
+    # ------------------------------------------------------------ params
+    def _fc_spec_tree(self, leaf):
+        """A CompressedFC-shaped pytree of PartitionSpecs (leading axis =
+        the scan-over-layers L; row/output axes shard over tp)."""
+        from repro.core import quant as q
+        from repro.core import sparse_fc as sfc
+        from repro.kernels import acsr_spmv as sp
+        tp = self.tp_axis
+        stk = leaf.dense is not None and leaf.dense.ndim == 3 \
+            or leaf.qt is not None and leaf.qt.q.ndim == 3 \
+            or leaf.codes_packed is not None and leaf.codes_packed.ndim == 3 \
+            or leaf.blocked is not None and leaf.blocked.values.ndim == 4
+        lead = (None,) if stk else ()
+        if leaf.mode == "dense":
+            return sfc.CompressedFC(leaf.mode, leaf.shape,
+                                    dense=P(*lead, tp, None))
+        if leaf.mode == "int8":
+            qt = q.QTensor(q=P(*lead, tp, None), scale=P(*lead, tp, None),
+                           bits=leaf.qt.bits)
+            return sfc.CompressedFC(leaf.mode, leaf.shape, qt=qt)
+        if leaf.mode == "codebook4":
+            return sfc.CompressedFC(
+                leaf.mode, leaf.shape, codes_packed=P(*lead, tp, None),
+                centroids=P())
+        if leaf.mode in ("acsr", "aida"):
+            b = leaf.blocked
+            blocked = sp.BlockedACSR(
+                values=P(*lead, tp, None, None),
+                col_idx=P(*lead, tp, None, None),
+                row_nnz=P(*lead, tp, None),
+                shape=b.shape, block_rows=b.block_rows, nnz=b.nnz,
+                centroids=None if b.centroids is None else P())
+            return sfc.CompressedFC(leaf.mode, leaf.shape, blocked=blocked)
+        raise ValueError(leaf.mode)
+
+    def param_specs(self, cfg: ArchConfig, params: Dict):
+        """Pytree of PartitionSpecs congruent with ``params`` (compressed
+        leaves expand into container-shaped spec subtrees).
+
+        Raw (uncompressed) matrices shard their LAST (output) axis over
+        the model axis — column-parallel everywhere.  Unlike the
+        training specs (Megatron row-parallel wo/down with psum
+        combine), serving never shards a contraction dim: every output
+        element is computed with single-device arithmetic, which is
+        what keeps mesh decode *token-identical* (psum reduction order
+        is the one thing GSPMD may not preserve).  Router/norm/scalar
+        leaves replicate (a sharded router softmax would re-order its
+        reduction too)."""
+        from repro.core import sparse_fc as sfc
+
+        def rule(path, leaf):
+            names = tuple(str(getattr(k, "key", k)) for k in path)
+            if isinstance(leaf, sfc.CompressedFC):
+                return self._fc_spec_tree(leaf)
+            if names[0] == "embed":
+                return P(self.tp_axis, None)        # vocab rows
+            if names[0] == "lm_head":
+                return P(None, self.tp_axis)
+            if names[0] == "layers" and getattr(leaf, "ndim", 0) >= 3 \
+                    and names[-1] != "router":
+                # stacked [L, ..., d_out]: output features over model
+                return P(*([None] * (leaf.ndim - 1)), self.tp_axis)
+            return P()          # norms, biases, routers, scalar leaves
+
+        return jax.tree_util.tree_map_with_path(
+            rule, params,
+            is_leaf=lambda x: isinstance(x, sfc.CompressedFC))
+
+    def param_shardings(self, cfg: ArchConfig, params: Dict):
+        specs = self.param_specs(cfg, params)
+        return jax.tree.map(
+            lambda leaf, sp: self.named(self.fit(sp, leaf.shape)),
+            params, specs)
+
+    # ------------------------------------------------------------- state
+    def state_specs(self, state: Dict):
+        """Pytree of PartitionSpecs congruent with a decode-state tree:
+        KV head axes shard over tp, everything host-managed (page table,
+        positions, recurrent slot state) replicates."""
+        def rule(path, leaf):
+            names = tuple(str(getattr(k, "key", k)) for k in path)
+            in_kv = "kv" in names
+            if in_kv and leaf.ndim == 5:
+                # [L, n_pages|B, Hkv, ps|S, Dh]: heads over model
+                return P(None, None, self.tp_axis, None, None)
+            if in_kv and leaf.ndim == 3 and \
+                    jax.numpy.issubdtype(leaf.dtype, jax.numpy.floating):
+                return P(None, None, self.tp_axis)   # per-page/head scales
+            return P()
+        return jax.tree_util.tree_map_with_path(rule, state)
+
+    def state_shardings(self, state: Dict):
+        specs = self.state_specs(state)
+        return jax.tree.map(
+            lambda leaf, sp: self.named(self.fit(sp, leaf.shape)),
+            state, specs)
+
+
+def make_plan(mesh: Mesh, cfg: Optional[ArchConfig] = None,
+              policy=None) -> ShardingPlan:
+    """Build a serving ShardingPlan from a mesh (must carry a ``model``
+    axis; a ``data`` axis, if present, replicates for now — batch-slot
+    data parallelism is the documented next step)."""
+    if "model" not in mesh.axis_names:
+        raise ValueError(
+            f"serving mesh needs a 'model' axis; got {mesh.axis_names}")
+    pol = DEFAULT_POLICY if policy is None else tuple(sorted(policy.items()))
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ShardingPlan(mesh=mesh, tp_axis="model", dp_axes=dp_axes,
+                        policy=pol)
