@@ -38,6 +38,15 @@ And the scheduler section ("serving"):
   * heterogeneous-workload throughput gates like the FC modes: within
     tol of the baseline in absolute tok/s OR normalized by the same
     run's dense-mode tok/s (host speed cancels in the second unit).
+
+And the disaggregated-serving section ("disagg"):
+  * token parity with the co-located engine, handoffs actually moving
+    pages, and zero leaked pages on both pools are deterministic and
+    gate hard;
+  * scheduling-clock TTFT-p99 (ticks) must be no worse disaggregated
+    than co-located — the deterministic form of the latency win;
+  * wall throughput gates dual-unit (absolute OR disagg/co-located
+    ratio vs baseline).
 """
 from __future__ import annotations
 
@@ -88,6 +97,68 @@ def check(new: dict, base: dict, tol: float, log=print) -> bool:
     ok &= check_kv(new, base, tol, log=log)
     ok &= check_serving(new, base, tol, log=log)
     ok &= check_sharding(new, base, tol, log=log)
+    ok &= check_disagg(new, base, tol, log=log)
+    return ok
+
+
+def check_disagg(new: dict, base: dict, tol: float, log=print) -> bool:
+    """Disaggregated-serving gate.  Deterministic facts gate hard: token
+    parity with the co-located engine, every decode-bound request handed
+    off exactly once, zero pages leaked on either pool, and the
+    scheduling-clock TTFT-p99 (ticks — the signal that survives a noisy
+    host; on one emulated device the two roles serialize, so wall TTFT
+    is NOT comparable) no worse than the same run's co-located baseline.
+    Wall-clock throughput gates dual-unit like the FC modes."""
+    dg = new.get("disagg")
+    if dg is None:
+        log("  disagg section MISSING from new run")
+        return False
+    ok = True
+    if not dg.get("token_parity"):
+        log("  disagg token parity LOST — disaggregated decode diverged "
+            "from the co-located engine")
+        ok = False
+    co, di = dg.get("colocated", {}), dg.get("disagg", {})
+    for label, side in (("colocated", co), ("disagg", di)):
+        if side.get("pages_leaked") != 0:
+            log(f"  disagg {label} leaked "
+                f"{side.get('pages_leaked')} pages at drain")
+            ok = False
+    hand = di.get("handoff", {})
+    if not hand.get("count") or not hand.get("migrated_bytes"):
+        log(f"  disagg handoffs {hand.get('count')} / migrated bytes "
+            f"{hand.get('migrated_bytes')} — the migration channel did "
+            "not move any pages")
+        ok = False
+    cop99 = (co.get("ttft_sched") or {}).get("p99")
+    dip99 = (di.get("ttft_sched") or {}).get("p99")
+    if cop99 is None or dip99 is None or dip99 > cop99:
+        log(f"  disagg scheduling-clock TTFT p99 {dip99} worse than "
+            f"co-located {cop99} — role separation lost its latency win")
+        ok = False
+    # wall throughput: dual-unit (absolute OR same-run disagg/co-located
+    # ratio vs baseline's)
+    tok, ctok = di.get("tok_per_s"), co.get("tok_per_s")
+    bdg = base.get("disagg", {})
+    btok = bdg.get("disagg", {}).get("tok_per_s")
+    bctok = bdg.get("colocated", {}).get("tok_per_s")
+    if tok is None:
+        log("  disagg throughput missing")
+        ok = False
+    elif btok:
+        abs_ok = tok >= btok * (1.0 - tol)
+        rel_ok = (ctok and bctok
+                  and tok / ctok >= (btok / bctok) * (1.0 - tol))
+        if not (abs_ok or rel_ok):
+            log(f"  disagg throughput REGRESSION {btok:.1f} -> "
+                f"{tok:.1f} tok/s (vs co-located "
+                f"{btok / bctok if bctok else 0:.3f} -> "
+                f"{tok / ctok if ctok else 0:.3f})")
+            ok = False
+    if ok:
+        log(f"  disagg     parity OK  TTFT-p99 {dip99} vs {cop99} ticks  "
+            f"{hand.get('count')} handoffs "
+            f"({hand.get('migrated_bytes')} B)  {tok:.1f} tok/s  OK")
     return ok
 
 

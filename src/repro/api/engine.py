@@ -100,46 +100,15 @@ class Engine:
         return self
 
     # ------------------------------------------------------------- serve
-    def session(self, batch_slots: int = 4, max_len: int = 256,
-                seed: int = 0, kv_cache: Optional[str] = None,
-                page_size: int = 16,
-                kv_pool_pages: Optional[int] = None,
-                kv_dtype: Optional[str] = None,
-                scheduler=None, mesh=None) -> Session:
-        """A continuous-batching serving session on the active backend.
-
-        ``scheduler``: a sched.SchedConfig (or dict / policy name) —
-        admission policy, prefill chunk width, prefix caching.
-
-        ``mesh``: a jax Mesh with a ``model`` axis — serving goes
-        tensor-parallel on an explicit `repro.shard.ShardingPlan`:
-        compressed FC runs shard-local (each device owns a band of row
-        blocks / output channels), KV pools shard their head axis, and
-        the decode / chunked-prefill steps compile with input/output
-        shardings.  ``mesh=None`` (default) is the unchanged
-        single-device path.
-
-        On the Pallas backend, every unique compressed-FC geometry is
-        autotuned for this batch width *before* the decode step compiles,
-        so the jitted step traces against the winning tiles
-        (kernels.tune; disable with REPRO_AUTOTUNE=0).  A paged-KV
-        session additionally pre-tunes the paged-attention impl/tile
-        choice for this (geometry, batch, backend); a mesh session tunes
-        the *shard-local* FC geometries its shard_map kernels will run.
-        """
-        if self.cfg is None:
-            raise ValueError("serving needs an ArchConfig")
-        backend = self.backend
-        if not backend.caps.batched_decode:
-            raise CapabilityError(
-                f"backend {backend.name!r} cannot serve (no batched decode)")
-        plan = None
-        if mesh is not None:
-            from repro import shard as shardmod
-            plan = shardmod.make_plan(mesh, self.cfg)
+    def _pretune(self, batch_slots: int, max_len: int, page_size: int,
+                 kv_dtype: Optional[str], kv_cache: Optional[str],
+                 plan) -> None:
+        """Autotune the kernels a session at this batch width will trace:
+        compressed-FC geometries (shard-local under a plan) and — when
+        heads stay whole — the paged-attention impl/tile choice."""
         from repro.kernels import ops, tune
         tp = plan.tp if plan is not None else 1
-        if backend.name == "pallas" and self.compression is not None:
+        if self.backend.name == "pallas" and self.compression is not None:
             if tune.enabled():
                 if tp > 1:
                     # the sharded step only looks up shard-LOCAL
@@ -161,6 +130,88 @@ class Engine:
             tune.tune_paged(self.cfg, batch_slots, max_len, page_size,
                             kv_dtype or sess_mod.KV_DTYPE_DEFAULT,
                             ops.pallas_interpret())
+
+    def session(self, batch_slots: int = 4, max_len: int = 256,
+                seed: int = 0, kv_cache: Optional[str] = None,
+                page_size: int = 16,
+                kv_pool_pages: Optional[int] = None,
+                kv_dtype: Optional[str] = None,
+                scheduler=None, mesh=None, disagg=None):
+        """A continuous-batching serving session on the active backend.
+
+        ``scheduler``: a sched.SchedConfig (or dict / policy name) —
+        admission policy, prefill chunk width, prefix caching.
+
+        ``mesh``: a jax Mesh with a ``model`` axis — serving goes
+        tensor-parallel on an explicit `repro.shard.ShardingPlan`:
+        compressed FC runs shard-local (each device owns a band of row
+        blocks / output channels), KV pools shard their head axis, and
+        the decode / chunked-prefill steps compile with input/output
+        shardings.  ``mesh=None`` (default) is the unchanged
+        single-device path.
+
+        ``disagg``: True / dict / `repro.disagg.DisaggConfig` — build a
+        disaggregated prefill/decode session pair instead (returns a
+        `repro.disagg.DisaggSession` with the same submit/run surface):
+        two roles sharing this engine's params, each with its own slots
+        and page pool, connected by the page-migration channel.  With
+        ``prefill_devices``/``decode_devices`` set, the roles run
+        tensor-parallel on disjoint device meshes
+        (launch.mesh.make_role_meshes); ``batch_slots`` and
+        ``kv_pool_pages`` are ignored in favor of the per-role knobs.
+        Mutually exclusive with ``mesh``.
+
+        On the Pallas backend, every unique compressed-FC geometry is
+        autotuned for this batch width *before* the decode step compiles,
+        so the jitted step traces against the winning tiles
+        (kernels.tune; disable with REPRO_AUTOTUNE=0).  A paged-KV
+        session additionally pre-tunes the paged-attention impl/tile
+        choice for this (geometry, batch, backend); a mesh session tunes
+        the *shard-local* FC geometries its shard_map kernels will run.
+        """
+        if self.cfg is None:
+            raise ValueError("serving needs an ArchConfig")
+        backend = self.backend
+        if not backend.caps.batched_decode:
+            raise CapabilityError(
+                f"backend {backend.name!r} cannot serve (no batched decode)")
+        if disagg is not None and disagg is not False:
+            if mesh is not None:
+                raise ValueError(
+                    "mesh= and disagg= are mutually exclusive — give the "
+                    "roles their own devices via DisaggConfig."
+                    "prefill_devices/decode_devices")
+            if kv_cache not in (None, "auto", "paged"):
+                raise ValueError(
+                    "disaggregated serving migrates KV pages; it cannot "
+                    f"run on kv_cache={kv_cache!r}")
+            from repro.disagg import DisaggConfig, DisaggSession
+            d = DisaggConfig.coerce(disagg)
+            pre_plan = dec_plan = None
+            if d.prefill_devices is not None:
+                from repro import shard as shardmod
+                from repro.launch.mesh import make_role_meshes
+                pre_mesh, dec_mesh = make_role_meshes(
+                    d.prefill_devices, d.decode_devices)
+                pre_plan = shardmod.make_plan(pre_mesh, self.cfg)
+                dec_plan = shardmod.make_plan(dec_mesh, self.cfg)
+            self._pretune(d.prefill_slots, max_len, page_size, kv_dtype,
+                          "paged", pre_plan)
+            if d.decode_slots != d.prefill_slots or \
+                    dec_plan is not pre_plan:
+                self._pretune(d.decode_slots, max_len, page_size,
+                              kv_dtype, "paged", dec_plan)
+            return DisaggSession(
+                self.cfg, self.params, disagg=d, max_len=max_len,
+                seed=seed, backend=backend, page_size=page_size,
+                kv_dtype=kv_dtype, scheduler=scheduler,
+                prefill_plan=pre_plan, decode_plan=dec_plan)
+        plan = None
+        if mesh is not None:
+            from repro import shard as shardmod
+            plan = shardmod.make_plan(mesh, self.cfg)
+        self._pretune(batch_slots, max_len, page_size, kv_dtype,
+                      kv_cache, plan)
         return Session(self.cfg, self.params, batch_slots=batch_slots,
                        max_len=max_len, seed=seed, backend=backend,
                        kv_cache=kv_cache, page_size=page_size,
@@ -171,12 +222,14 @@ class Engine:
               *, batch_slots: int = 4, max_len: int = 256,
               max_steps: int = 10_000, seed: int = 0,
               kv_cache: Optional[str] = None,
-              scheduler=None) -> List[Result]:
+              scheduler=None, disagg=None) -> List[Result]:
         """Serve a batch of requests to completion (continuous batching).
-        Results come back in deterministic rid order."""
+        Results come back in deterministic rid order.  ``disagg`` routes
+        through a disaggregated prefill/decode session pair — greedy
+        results are token-identical either way."""
         sess = self.session(batch_slots=batch_slots, max_len=max_len,
                             seed=seed, kv_cache=kv_cache,
-                            scheduler=scheduler)
+                            scheduler=scheduler, disagg=disagg)
         for rid, req in enumerate(requests):
             if not isinstance(req, Request):
                 req = Request(prompt=list(req), rid=rid)
@@ -467,6 +520,80 @@ class Engine:
         }
         return out
 
+    def disagg_benchmark(self, mode: str = "aida", density: float = 0.25,
+                         chunk: int = 8, page_size: int = 8,
+                         max_len: int = 64, n_requests: int = 12) -> dict:
+        """The `"disagg"` section of BENCH_api.json: disaggregated
+        prefill/decode vs the co-located engine on the same ``burst``
+        workload (the arrival pattern disaggregation exists for — a
+        burst of prompts stalls a co-located batch's decoders).
+
+        Deterministic facts carry the CI gate: token parity between the
+        two engine shapes, handoff count == decode-bound requests, zero
+        pages leaked on any allocator.  Wall-clock TTFT-p99 and tok/s
+        are the dual-unit trajectory signal."""
+        from repro import sched as schd
+        cfg = self.cfg
+        if cfg is None or not schd.supports_chunked_prefill(cfg):
+            raise CapabilityError(
+                "disagg_benchmark needs an arch whose per-request state "
+                "is entirely KV pages (sched.supports_chunked_prefill)")
+        eng = Engine(cfg, params=self.params)
+        if mode != "dense":
+            eng.compress(CompressionSpec(mode=mode, density=density),
+                         verbose=None)
+        wl = schd.WorkloadSpec.preset("burst", n_requests=n_requests,
+                                      vocab=cfg.vocab, seed=0)
+        arrivals = schd.generate(wl)
+
+        def replay():
+            return [(t, Request(prompt=list(r.prompt), max_new=r.max_new,
+                                rid=r.rid)) for t, r in arrivals]
+
+        # matched slot widths: the comparison isolates role separation
+        # itself (decoders never occupying prompt-admission slots), not a
+        # capacity difference
+        sched_cfg = {"chunk": chunk}
+        dcfg = {"prefill_slots": 4, "decode_slots": 4}
+        out = {"mode": mode, "chunk": chunk, "workload": "burst",
+               "requests": n_requests}
+        # warm both engine shapes so TTFT measures scheduling, not XLA
+        for dis in (None, dict(dcfg)):
+            s = eng.session(max_len=max_len, kv_cache="paged",
+                            page_size=page_size, scheduler=sched_cfg,
+                            disagg=dis)
+            s.submit(Request(prompt=[1] * (chunk + 1), max_new=2, rid=-1))
+            s.run()
+        for label, dis in (("colocated", None), ("disagg", dict(dcfg))):
+            best = None
+            for _ in range(3):
+                sess = eng.session(batch_slots=4, max_len=max_len,
+                                   kv_cache="paged", page_size=page_size,
+                                   scheduler=sched_cfg, disagg=dis)
+                t0 = time.perf_counter()
+                res = sess.run_workload(replay())
+                dt = time.perf_counter() - t0
+                if dis is None:
+                    summ = schd.summarize(sess.records, dt,
+                                          sess.stats["steps"])
+                    leaked = sess.alloc.in_use
+                else:
+                    summ = schd.summarize(
+                        sess.records, dt,
+                        sess.pre.stats["steps"] + sess.dec.stats["steps"],
+                        roles=sess.role_stats())
+                    leaked = sess.pre.alloc.in_use + sess.dec.alloc.in_use
+                summ["pages_leaked"] = leaked
+                summ["tokens_by_rid"] = {r.rid: r.tokens for r in res}
+                if best is None or (summ["tok_per_s"] or 0) > \
+                        (best["tok_per_s"] or 0):
+                    best = summ
+            out[label] = best
+        out["token_parity"] = \
+            out["colocated"].pop("tokens_by_rid") == \
+            out["disagg"].pop("tokens_by_rid")
+        return out
+
     def benchmark(self, modes: Sequence[str] = ("dense", "aida"),
                   requests: int = 4, max_new: int = 8,
                   batch_slots: int = 2, density: float = 0.25,
@@ -530,6 +657,13 @@ class Engine:
             # preemption-instead-of-OutOfPages — also CI-gated
             out["serving"] = self.serving_benchmark(mode=kv_mode,
                                                     density=density)
+            from repro import sched as schd
+            if schd.supports_chunked_prefill(self.cfg):
+                # disaggregated prefill/decode vs co-located on the burst
+                # preset: token parity + handoff/migration accounting +
+                # TTFT-p99 — also CI-gated
+                out["disagg"] = self.disagg_benchmark(mode=kv_mode,
+                                                      density=density)
         if problem is None:
             rng = np.random.default_rng(0)
             w = rng.integers(-15, 16, size=(24, 32)) \

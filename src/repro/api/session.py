@@ -322,7 +322,8 @@ class Session:
         for i in range(self.slots):
             if self.slot_entry[i] is not None:
                 continue
-            entry = self.sched.next_entry(self._fits)
+            entry = self.sched.next_entry(self._fits,
+                                          step=self.stats["steps"])
             if entry is None:
                 break
             self._admit(i, entry)
@@ -523,23 +524,27 @@ class Session:
         self.stats["pages_reclaimed_swa"] += len(events)
         self.stats["pages_in_use"] = self.alloc.in_use
 
+    def _insert_slot_prefix(self, i: int, entry: schd.SchedEntry) -> None:
+        """Pin slot ``i``'s freshly-completed full prompt pages into the
+        prefix cache (first writer wins; generated-token pages are never
+        cached).  Also called by the disagg prefill role right before a
+        handoff, when the slot's entry reference is already detached."""
+        n_full = len(entry.req.prompt) // self.page_size
+        j = self.slot_cache_j[i]
+        while j < min(n_full, self.host_table.shape[1]) \
+                and self.slot_pos[i] >= (j + 1) * self.page_size:
+            pid = int(self.host_table[i, j])
+            if pid >= 0:           # may be gone (SWA reclamation)
+                self.prefix.insert(entry.hashes[j], pid, self.alloc)
+            j += 1
+        self.slot_cache_j[i] = j
+
     def _insert_prefix_pages(self) -> None:
-        """Pin freshly-completed full prompt pages into the prefix cache
-        (first writer wins; generated-token pages are never cached)."""
         if self.prefix is None:
             return
         for i, entry in enumerate(self.slot_entry):
-            if entry is None:
-                continue
-            n_full = len(entry.req.prompt) // self.page_size
-            j = self.slot_cache_j[i]
-            while j < min(n_full, self.host_table.shape[1]) \
-                    and self.slot_pos[i] >= (j + 1) * self.page_size:
-                pid = int(self.host_table[i, j])
-                if pid >= 0:       # may be gone (SWA reclamation)
-                    self.prefix.insert(entry.hashes[j], pid, self.alloc)
-                j += 1
-            self.slot_cache_j[i] = j
+            if entry is not None:
+                self._insert_slot_prefix(i, entry)
 
     # ------------------------------------------------------------ stepping
     def _advance(self):

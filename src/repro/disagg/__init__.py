@@ -1,0 +1,20 @@
+"""Disaggregated prefill/decode serving.
+
+Splits the serving engine into a prefill role and a decode role — each
+with its own batch slots, page pool, and allocator, optionally on
+disjoint device meshes — connected by a page-migration channel and a
+role-aware router with decode→prefill back-pressure.  See session.py
+for the roles and the orchestrator, migrate.py for the page channel,
+router.py for admission routing.  Entry points:
+``Engine.session(disagg=...)`` / ``Engine.serve(disagg=...)`` /
+``python -m repro.launch.serve --disagg``.
+"""
+from repro.disagg.migrate import Handoff, migrate_kv
+from repro.disagg.router import DisaggRouter
+from repro.disagg.session import (DecodeSession, DisaggConfig,
+                                  DisaggSession, PrefillSession)
+
+__all__ = [
+    "DecodeSession", "DisaggConfig", "DisaggRouter", "DisaggSession",
+    "Handoff", "PrefillSession", "migrate_kv",
+]

@@ -1,0 +1,57 @@
+"""KV page migration channel between disaggregated engine roles.
+
+A handoff is the unit of work that crosses the prefill→decode boundary:
+the scheduler entry (request + generated-so-far tokens + lifecycle
+record) plus the prompt's page-table row and position.  The page ids in
+``pages`` are *prefill-pool* ids whose ownership has already been
+detached from the prefill slot — they stay refcounted in the prefill
+allocator until the migration lands, at which point the orchestrator
+frees them (shared prefix pages just drop one owner).
+
+``migrate_kv`` copies the live pages into freshly allocated decode-pool
+pages via `kvstore.copy_pages`: bf16 payloads move bit-exact, int8
+payloads move codes *and* per-page scales with no requantization — which
+is what makes disaggregated greedy decode token-identical to the
+co-located engine.  Holes in the row (NO_PAGE, from SWA reclamation)
+stay holes: table index == absolute position // page_size on both sides,
+so the decode role resumes exactly where prefill stopped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro import kvstore as kvs
+
+
+@dataclasses.dataclass
+class Handoff:
+    """One finished prompt in flight from the prefill role to the decode
+    role.  ``pages`` is the full prefill page-table row (NO_PAGE holes
+    included — index alignment carries the position mapping); ``pos`` is
+    the sequence position the decode role resumes at (== prompt length);
+    ``tick`` is the orchestrator tick the handoff was created on."""
+    entry: object                  # sched.SchedEntry (record rides along)
+    pages: List[int]
+    pos: int
+    tick: int = 0
+
+    def live(self) -> List[Tuple[int, int]]:
+        """(table_index, prefill_page_id) for every resident page."""
+        return [(j, p) for j, p in enumerate(self.pages) if p >= 0]
+
+
+def migrate_kv(src_state: dict, dst_state: dict, src_ids: List[int],
+               dst_ids: List[int], dst_shardings=None
+               ) -> Tuple[dict, int]:
+    """Copy pages ``src_ids`` of the prefill serving state's pool into
+    pages ``dst_ids`` of the decode state's pool; returns the updated
+    decode state and the payload byte count.  Pools must share geometry
+    (page size, head/dim layout, quantization) — both roles are built
+    from the same ArchConfig, so they do by construction."""
+    new_kv, moved = kvs.copy_pages(
+        src_state["layers"]["kv"], dst_state["layers"]["kv"],
+        src_ids, dst_ids, dst_shardings=dst_shardings)
+    layers = dict(dst_state["layers"])
+    layers["kv"] = new_kv
+    return {**dst_state, "layers": layers}, moved

@@ -1,0 +1,373 @@
+"""Disaggregated prefill/decode serving: two engine roles, one model.
+
+The co-located `api.Session` time-slices prefill chunks and decode steps
+through one batch on one pool, so a long prompt admitted mid-stream
+stalls every decoder sharing the batch (TTFT and TPOT fight for the same
+step budget).  Disaggregation splits the session into two *roles*:
+
+* a **prefill role** (`PrefillSession`) that only runs prompt
+  processing — its own slots, its own `PagedKV` pool and allocator,
+  chunked prefill at the configured chunk size.  The step it would have
+  emitted the first token, it *hands the request off* instead: the
+  sampled first token, the lifecycle record, and the prompt's pages
+  leave the role through the router's handoff queue.
+* a **decode role** (`DecodeSession`) that only runs continuous-batching
+  decode — admission happens from the handoff queue, never from the
+  request queue.  Admission allocates fresh decode-pool pages, copies
+  the prompt pages over (`disagg.migrate` — bf16 bit-exact, int8
+  codes+scales verbatim), remaps the slot's page table, and resumes at
+  the handoff position.  Decode-role admission *reserves* every page a
+  request can ever need, so decoders are never preempted: pool pressure
+  propagates backwards as back-pressure on prefill admission
+  (`DisaggRouter`) instead of forwards as wasted recompute.
+
+`DisaggSession` owns both roles plus the router and drives them on a
+shared tick: each tick runs at most one decode step and one prefill
+step (the two batches would overlap on disjoint devices in a real
+deployment — and do, when the roles are built on disjoint meshes).
+Because greedy sampling is deterministic, pages migrate bit-exact, and
+decode never preempts, the disaggregated token streams are identical to
+the co-located paged engine's for every scheduling order.
+
+Requires a paged KV cache on an arch whose per-request state lives
+entirely in KV pages (`sched.supports_chunked_prefill`): recurrent
+per-token state (rwkv6/hymba) cannot ride a page migration.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+import warnings
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import kvstore as kvs
+from repro import sched as schd
+from repro.api.session import Request, Result, Session
+from repro.disagg.migrate import Handoff, migrate_kv
+from repro.disagg.router import DisaggRouter
+
+
+@dataclasses.dataclass
+class DisaggConfig:
+    """Two-role topology knobs.  Pool sizes default to the engine-side
+    heuristics when None; ``max_backlog=None`` tracks decode_slots (one
+    queued handoff per decode slot before prefill admission stalls)."""
+    prefill_slots: int = 2
+    decode_slots: int = 4
+    prefill_pool_pages: Optional[int] = None
+    decode_pool_pages: Optional[int] = None
+    max_backlog: Optional[int] = None
+    prefill_devices: Optional[int] = None   # mesh roles (launch.mesh)
+    decode_devices: Optional[int] = None
+
+    def __post_init__(self):
+        if self.prefill_slots < 1 or self.decode_slots < 1:
+            raise ValueError("each role needs at least one batch slot")
+        if (self.prefill_devices is None) != (self.decode_devices is None):
+            raise ValueError("set prefill_devices and decode_devices "
+                             "together (or neither)")
+
+    @classmethod
+    def coerce(cls, val) -> "DisaggConfig":
+        if val is None or val is True:
+            return cls()
+        if isinstance(val, cls):
+            return val
+        if isinstance(val, dict):
+            return cls(**val)
+        raise TypeError(f"cannot make a DisaggConfig from {val!r}")
+
+
+class PrefillSession(Session):
+    """The prefill role: a Session whose scheduler is the shared router
+    and whose requests leave through the handoff queue the moment they
+    emit their first token.  ``max_new == 1`` requests never reach the
+    decode role at all — their single token completes here."""
+
+    def __init__(self, *args, router: DisaggRouter,
+                 on_handoff: Callable[[Handoff], None], **kw):
+        kw["scheduler"] = router.cfg
+        super().__init__(*args, **kw)
+        if self.kv_cache != "paged" or \
+                not schd.supports_chunked_prefill(self.cfg):
+            raise ValueError(
+                "disaggregated serving needs a paged KV cache on an arch "
+                "whose per-request state is entirely KV pages "
+                f"(family {self.cfg.family!r} keeps per-token recurrent "
+                "state that cannot ride a page migration)")
+        self.sched = router            # same cfg, shared queue + backlog
+        self._on_handoff = on_handoff
+        self.tick = 0                  # orchestrator clock (stamps handoffs)
+
+    def _page_need(self, entry: schd.SchedEntry) -> int:
+        # prompt-only residency: generated tokens land in the decode pool
+        req = entry.req
+        return schd.scheduler.page_need(
+            len(req.prompt) + len(entry.out), 0, self.max_len,
+            self.page_size)
+
+    def _emit(self, i: int, logits_i: np.ndarray, now: float):
+        entry = self.slot_entry[i]
+        super()._emit(i, logits_i, now)
+        # every prefill-role emit IS a first token (tick-denominated
+        # twin of the record's first_token_step stamp)
+        entry.record["first_token_tick"] = self.tick
+        if self.slot_entry[i] is None:
+            return                     # max_new == 1: finished at prefill
+        # first token emitted — detach the slot and hand the request off.
+        # Prompt pages get pinned into the prefix cache first (the slot
+        # row is about to be cleared), then ownership of the row moves to
+        # the Handoff: the table is wiped WITHOUT freeing, and the
+        # orchestrator frees the prefill-side refs once migration lands.
+        if self.prefix is not None:
+            self._insert_slot_prefix(i, entry)
+        entry.out = list(self.slot_out[i])
+        pages = [int(p) for p in self.host_table[i]]
+        self.host_table[i] = -1
+        self.state["page_table"] = self.state["page_table"].at[i].set(
+            jnp.int32(kvs.NO_PAGE))
+        rec = entry.record
+        rec["prefill_done_time"] = now
+        rec["prefill_done_tick"] = self.tick
+        self.slot_entry[i] = None
+        self.slot_pending[i] = []
+        self.slot_out[i] = []
+        self._on_handoff(Handoff(entry=entry, pages=pages,
+                                 pos=self.slot_pos[i], tick=self.tick))
+
+
+class DecodeSession(Session):
+    """The decode role: a Session that never touches its own request
+    queue — slots fill from handoffs, and admission reserves the full
+    worst-case page need so running decoders are never preempted."""
+
+    def __init__(self, *args, **kw):
+        kw["scheduler"] = {"policy": "fifo", "chunk": 1}
+        super().__init__(*args, **kw)
+        assert self.kv_cache == "paged"
+        self.stats.update({"handoffs": 0, "migrated_pages": 0,
+                           "migrated_bytes": 0})
+
+    # ------------------------------------------------------- admission
+    def _reserved_future(self) -> int:
+        """Pages the active slots may still allocate, worst case.  Holes
+        reclaimed by SWA only shrink the real number — counting held
+        pages from the table keeps this an overestimate."""
+        res = 0
+        for i, entry in enumerate(self.slot_entry):
+            if entry is None:
+                continue
+            held = int((self.host_table[i] >= 0).sum())
+            res += max(0, self._page_need(entry) - held)
+        return res
+
+    def fits_handoff(self, h: Handoff) -> bool:
+        """Worst-case admission: the request's total page need must fit
+        what is free AFTER honoring every admitted decoder's outstanding
+        reservation — this is what makes decode OutOfPages (and hence
+        decode preemption) impossible."""
+        need = self._page_need(h.entry)
+        return need <= self.alloc.available - self._reserved_future()
+
+    def admit_handoff(self, i: int, h: Handoff, src_state: dict,
+                      now: Optional[float] = None, tick: int = 0) -> int:
+        """Install handoff ``h`` into free slot ``i``: allocate decode
+        pages, migrate the prompt's KV, remap the table, resume at
+        ``h.pos``.  Returns migrated bytes.  All-or-nothing: allocation
+        is atomic (`alloc_many`) and the table is written only after the
+        copy, so a failure cannot strand half a request."""
+        assert self.slot_entry[i] is None
+        entry = h.entry
+        live = h.live()
+        dst = self.alloc.alloc_many(len(live))
+        sh = self._state_sh["layers"]["kv"] if self._state_sh else None
+        self.state, moved = migrate_kv(
+            src_state, self.state, [p for _, p in live], dst,
+            dst_shardings=sh)
+        self._reset_slot_state(i)      # clears table row, pos, slot leaves
+        row = np.full(self.host_table.shape[1], -1, np.int64)
+        for (j, _), pid in zip(live, dst):
+            row[j] = pid
+        self.host_table[i] = row
+        self.state["page_table"] = self.state["page_table"].at[i].set(
+            jnp.asarray(np.where(row >= 0, row, kvs.NO_PAGE), jnp.int32))
+        self.slot_pos[i] = h.pos
+        self.state["pos"] = self.state["pos"].at[i].set(h.pos)
+        self.slot_entry[i] = entry
+        self.slot_out[i] = list(entry.out)
+        self.slot_pending[i] = []
+        self.slot_cache_j[i] = 0
+        entry.seq = self.sched._seq    # admission age (youngest)
+        self.sched._seq += 1
+        now = time.perf_counter() if now is None else now
+        rec = entry.record
+        rec["handoff_latency_s"] = now - rec["prefill_done_time"]
+        rec["handoff_ticks"] = tick - rec["prefill_done_tick"]
+        rec["migrated_pages"] = len(live)
+        rec["migrated_bytes"] = moved
+        self.stats["fills"] += 1
+        self.stats["handoffs"] += 1
+        self.stats["migrated_pages"] += len(live)
+        self.stats["migrated_bytes"] += moved
+        self.stats["page_allocs"] = self.alloc.total_allocs
+        self.stats["pages_in_use"] = self.alloc.in_use
+        self.stats["pages_peak"] = self.alloc.peak
+        return moved
+
+
+class DisaggSession:
+    """Orchestrates the two roles on a shared tick clock.
+
+    The public surface mirrors `api.Session` (`submit`, `run`,
+    `run_workload`, `results`, `records`, `stats`) so workloads, metrics
+    and benchmarks drive either engine shape unchanged.  Arrival steps
+    are interpreted in ticks (the co-located session interprets them in
+    model calls — both are "scheduling opportunities")."""
+
+    def __init__(self, cfg, params, *, disagg: "DisaggConfig",
+                 max_len: int = 256, seed: int = 0, backend=None,
+                 page_size: int = 16, kv_dtype: Optional[str] = None,
+                 scheduler=None, prefill_plan=None, decode_plan=None):
+        d = DisaggConfig.coerce(disagg)
+        self.dcfg = d
+        backlog = d.max_backlog if d.max_backlog is not None \
+            else d.decode_slots
+        self.router = DisaggRouter(schd.SchedConfig.coerce(scheduler),
+                                   max_backlog=backlog)
+        self.pre = PrefillSession(
+            cfg, params, batch_slots=d.prefill_slots, max_len=max_len,
+            seed=seed, backend=backend, kv_cache="paged",
+            page_size=page_size, kv_pool_pages=d.prefill_pool_pages,
+            kv_dtype=kv_dtype, plan=prefill_plan,
+            router=self.router, on_handoff=self.router.push_handoff)
+        # decode shares the prefill role's (possibly shard-prepared)
+        # params — one model, two pools
+        self.dec = DecodeSession(
+            cfg, params if decode_plan is not None else self.pre.params,
+            batch_slots=d.decode_slots, max_len=max_len, seed=seed,
+            backend=backend, kv_cache="paged", page_size=page_size,
+            kv_pool_pages=d.decode_pool_pages, kv_dtype=kv_dtype,
+            plan=decode_plan)
+        self.results: List[Result] = []   # merged at drain
+        self.records = self.pre.records   # all requests enter via prefill
+        self.ticks = 0
+        self.stats = {"ticks": 0, "prefill_busy_ticks": 0,
+                      "decode_busy_ticks": 0, "handoffs": 0,
+                      "migrated_bytes": 0}
+
+    # ------------------------------------------------------------ public
+    def submit(self, req: Request) -> None:
+        self.pre.submit(req)
+        # tick-denominated lifecycle: comparable with the co-located
+        # engine's step clock (metrics.summarize prefers these fields)
+        self.records[-1]["submit_tick"] = self.ticks
+
+    def run(self, max_steps: int = 10_000,
+            on_incomplete: str = "raise") -> List[Result]:
+        return self.run_workload([], max_steps=max_steps,
+                                 on_incomplete=on_incomplete)
+
+    def run_workload(self, arrivals: Sequence[Tuple[int, Request]],
+                     max_steps: int = 10_000,
+                     on_incomplete: str = "raise") -> List[Result]:
+        pending: Deque[Tuple[int, Request]] = collections.deque(
+            sorted(arrivals, key=lambda a: a[0]))
+        clock = self.ticks
+        for _ in range(max_steps):
+            self.pre.tick = self.ticks
+            while pending and pending[0][0] <= clock:
+                self.submit(pending.popleft()[1])
+            self._admit_handoffs()
+            dec_busy = any(e is not None for e in self.dec.slot_entry)
+            if dec_busy:
+                self.dec._advance()
+            self.pre._fill_slots()
+            pre_busy = any(e is not None for e in self.pre.slot_entry)
+            if pre_busy:
+                self.pre._advance()
+            self.ticks += 1
+            self.stats["ticks"] = self.ticks
+            self.stats["prefill_busy_ticks"] += int(pre_busy)
+            self.stats["decode_busy_ticks"] += int(dec_busy)
+            if not (pre_busy or dec_busy):
+                self.ticks -= 1        # idle: that tick did no work
+                self.stats["ticks"] = self.ticks
+                if self.router.handoff:
+                    # both roles idle yet a handoff cannot land: the
+                    # decode pool cannot hold even this one request
+                    h = self.router.handoff[0]
+                    raise kvs.OutOfPages(
+                        f"decode page pool too small: request "
+                        f"{h.entry.req.rid} needs "
+                        f"{self.dec._page_need(h.entry)} pages, pool has "
+                        f"{self.dec.alloc.n_pages - 1} usable")
+                if len(self.router):
+                    self._incomplete(on_incomplete, blocked=True,
+                                     pending=pending)
+                    break
+                if pending:            # idle until the next arrival
+                    clock = pending[0][0]
+                    continue
+                break
+            clock += 1
+        else:
+            self._incomplete(on_incomplete, blocked=False, pending=pending)
+        self.stats["handoffs"] = self.router.stats["handoffs"]
+        self.stats["migrated_bytes"] = self.dec.stats["migrated_bytes"]
+        self.results = sorted(self.pre.results + self.dec.results,
+                              key=lambda r: r.rid)
+        return self.results
+
+    def role_stats(self) -> dict:
+        """Per-role counters in the shape sched.metrics.summarize folds
+        into the ``"roles"`` record."""
+        return {"prefill": {"steps": self.pre.stats["steps"],
+                            "busy_ticks": self.stats["prefill_busy_ticks"]},
+                "decode": {"steps": self.dec.stats["steps"],
+                           "busy_ticks": self.stats["decode_busy_ticks"]},
+                "_ticks": self.ticks}
+
+    # --------------------------------------------------------- internals
+    def _admit_handoffs(self) -> None:
+        """Land queued handoffs FIFO into free decode slots; the head
+        blocks (order stays deterministic).  Prefill-side page refs are
+        released only after the migration lands — a handoff in flight
+        can always be replayed."""
+        while self.router.handoff:
+            h = self.router.handoff[0]
+            slot = next((i for i, e in enumerate(self.dec.slot_entry)
+                         if e is None), None)
+            if slot is None or not self.dec.fits_handoff(h):
+                break
+            self.router.handoff.popleft()
+            self.dec.admit_handoff(slot, h, self.pre.state,
+                                   tick=self.ticks)
+            self.pre.alloc.free(p for p in h.pages if p >= 0)
+            self.pre.stats["pages_in_use"] = self.pre.alloc.in_use
+
+    def _incomplete(self, on_incomplete: str, blocked: bool,
+                    pending: Sequence[Tuple[int, Request]] = ()) -> None:
+        unfinished = [e.req.rid for e in self.pre.slot_entry
+                      if e is not None]
+        unfinished += [e.req.rid for e in self.dec.slot_entry
+                       if e is not None]
+        unfinished += [e.req.rid for e in self.router.queue]
+        unfinished += [h.entry.req.rid for h in self.router.handoff]
+        unfinished += [req.rid for _, req in pending]
+        if not unfinished or on_incomplete == "ignore":
+            return
+        why = ("prefill admission blocked (page pool too small for the "
+               "head-of-line request's prompt)" if blocked
+               else "max_steps exhausted")
+        done = len(self.pre.results) + len(self.dec.results)
+        msg = (f"DisaggSession.run stopped with {len(unfinished)} "
+               f"unfinished request(s) {sorted(unfinished)}: {why}; "
+               f"{done} completed")
+        if on_incomplete == "warn":
+            warnings.warn(msg, RuntimeWarning, stacklevel=3)
+            return
+        raise kvs.OutOfPages(msg) if blocked else RuntimeError(msg)

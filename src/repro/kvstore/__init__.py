@@ -14,13 +14,14 @@ from repro.kvstore.paged_attention import (paged_attention,
                                            paged_attention_xla_chunk)
 from repro.kvstore.pool import (GARBAGE_PAGE, NO_PAGE, PagedKV,
                                 attention_mask, chunk_attention_mask,
-                                dense_kv_bytes_per_token, gather_kv,
-                                init_pool, init_table, kv_bytes_per_token,
-                                update)
+                                copy_pages, dense_kv_bytes_per_token,
+                                gather_kv, init_pool, init_table,
+                                kv_bytes_per_token, update)
 
 __all__ = [
     "GARBAGE_PAGE", "NO_PAGE", "OutOfPages", "PageAllocator", "PagedKV",
-    "attention_mask", "chunk_attention_mask", "dense_kv_bytes_per_token",
+    "attention_mask", "chunk_attention_mask", "copy_pages",
+    "dense_kv_bytes_per_token",
     "gather_kv", "init_pool", "init_table", "kv_bytes_per_token",
     "paged_attention", "paged_attention_pallas", "paged_attention_xla",
     "paged_attention_xla_chunk", "reclaimable_prefix", "update",

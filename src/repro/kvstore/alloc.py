@@ -62,6 +62,20 @@ class PageAllocator:
         self.peak = max(self.peak, self.in_use)
         return pid
 
+    def alloc_many(self, n: int) -> List[int]:
+        """Allocate ``n`` pages atomically: either all of them (refcount 1
+        each) or none (`OutOfPages`).  The disagg migration channel uses
+        this so a half-admitted handoff can never strand pages in the
+        decode pool."""
+        if n < 0:
+            raise ValueError(f"alloc_many wants n >= 0, got {n}")
+        if len(self._free) < n:
+            raise OutOfPages(
+                f"page pool exhausted ({self.n_pages} pages, "
+                f"{self.in_use} in use, {n} requested) — grow "
+                "kv_pool_pages or finish requests faster")
+        return [self.alloc() for _ in range(n)]
+
     def ref(self, pid: int) -> int:
         """Add an owner to a live page (prefix sharing). Returns the new
         refcount; refusing to resurrect a freed page keeps double-free

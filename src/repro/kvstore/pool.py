@@ -227,6 +227,74 @@ def chunk_attention_mask(table: jnp.ndarray, q_pos: jnp.ndarray,
     return ok & (pos > win_lo)
 
 
+# ---------------------------------------------------------- cross-pool copy
+def _page_axis(leaf) -> int:
+    """Page axis of a pool leaf: 0 for a single layer's [n_pages, ...]
+    arrays, 1 for the scan-stacked [L, n_pages, ...] serving layout."""
+    return leaf.ndim - 4 if leaf.ndim >= 4 else leaf.ndim - 2
+
+
+def _same_devices(a, b) -> bool:
+    sa, sb = getattr(a, "sharding", None), getattr(b, "sharding", None)
+    if sa is None or sb is None:
+        return True
+    return sa.device_set == sb.device_set
+
+
+def copy_pages(src: PagedKV, dst: PagedKV, src_ids, dst_ids,
+               dst_shardings: Optional[PagedKV] = None
+               ) -> Tuple[PagedKV, int]:
+    """Copy pages ``src_ids`` of ``src`` into pages ``dst_ids`` of ``dst``
+    (another pool of the same geometry) and return ``(new_dst, bytes)``.
+
+    The payload moves verbatim: bf16 pages are bit-exact, int8 pages move
+    codes *and* per-page scales with no requantization (zero added error).
+    Works on single-layer pools and the scan-stacked [L, n_pages, ...]
+    serving layout alike.  When the two pools live on different device
+    sets (disaggregated roles on disjoint mesh subsets) the payload is
+    staged through the host; same-device copies stay on device.
+    ``dst_shardings`` (a PagedKV of NamedShardings) re-commits the updated
+    leaves so a jitted step with explicit in_shardings sees no surprise
+    placement."""
+    if src.page_size != dst.page_size or \
+            src.k_pages.shape[-2:] != dst.k_pages.shape[-2:] or \
+            src.quantized != dst.quantized:
+        raise ValueError(
+            f"pool geometry mismatch: src {src.k_pages.shape} "
+            f"({src.k_pages.dtype}) vs dst {dst.k_pages.shape} "
+            f"({dst.k_pages.dtype})")
+    si = jnp.asarray(src_ids, jnp.int32)
+    di = jnp.asarray(dst_ids, jnp.int32)
+    if si.shape != di.shape:
+        raise ValueError(f"{si.shape[0]} source pages for "
+                         f"{di.shape[0]} destinations")
+    moved = 0
+
+    def copy_leaf(s, d, sh):
+        nonlocal moved
+        if s is None:
+            return None
+        ax = _page_axis(s)
+        block = jnp.take(s, si, axis=ax)
+        moved += block.size * block.dtype.itemsize
+        if not _same_devices(s, d):
+            block = jnp.asarray(jax.device_get(block))
+        idx = (slice(None),) * ax + (di,)
+        out = d.at[idx].set(block.astype(d.dtype))
+        if sh is not None:
+            out = jax.device_put(out, sh)
+        return out
+
+    shs = dst_shardings or PagedKV(None, None, None, None)
+    if si.shape[0] == 0:
+        return dst, 0
+    return PagedKV(
+        k_pages=copy_leaf(src.k_pages, dst.k_pages, shs.k_pages),
+        v_pages=copy_leaf(src.v_pages, dst.v_pages, shs.v_pages),
+        k_scale=copy_leaf(src.k_scale, dst.k_scale, shs.k_scale),
+        v_scale=copy_leaf(src.v_scale, dst.v_scale, shs.v_scale)), moved
+
+
 # ------------------------------------------------------------- accounting
 def kv_bytes_per_token(n_kv: int, d_head: int, page_size: int,
                        kv_dtype: str = "int8") -> float:

@@ -51,6 +51,35 @@ def make_host_mesh(n_model: Optional[int] = None,
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_role_meshes(n_prefill: int, n_decode: int):
+    """Disjoint (data, model) meshes for disaggregated serving roles:
+    the first ``n_prefill`` devices become the prefill role's mesh, the
+    next ``n_decode`` the decode role's.  Every device serves tensor-
+    parallel on the model axis (the axis this repo shards today); the
+    page-migration channel (repro.disagg.migrate) carries KV across the
+    two device sets.  Each role needs at least one device and the split
+    must fit the devices present."""
+    for name, deg in (("n_prefill", n_prefill), ("n_decode", n_decode)):
+        if deg < 1:
+            raise ValueError(
+                f"disaggregated roles need >= 1 device each; "
+                f"got {name}={deg}")
+    n = jax.device_count()
+    if n_prefill + n_decode > n:
+        raise ValueError(
+            f"role split {n_prefill}+{n_decode} needs "
+            f"{n_prefill + n_decode} devices but jax.device_count()={n}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "accordingly BEFORE importing jax")
+    devs = jax.devices()
+    import numpy as np
+    pre = np.asarray(devs[:n_prefill]).reshape(1, n_prefill)
+    dec = np.asarray(devs[n_prefill:n_prefill + n_decode]) \
+        .reshape(1, n_decode)
+    axes = ("data", "model")
+    return jax.sharding.Mesh(pre, axes), jax.sharding.Mesh(dec, axes)
+
+
 def make_pp_mesh():
     """Optional pipeline-parallel mesh (4 stages × 8 data × 8 model)."""
     return jax.make_mesh((4, 8, 8), ("pipe", "data", "model"))

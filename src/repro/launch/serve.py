@@ -12,6 +12,13 @@ Mesh serving (tensor-parallel over an explicit ShardingPlan): ``--mesh
 MODELxDATA`` (e.g. ``--mesh 4x2``) builds a host mesh through
 `launch.mesh.make_host_mesh`; on a laptop/CI host export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first.
+
+Disaggregated serving (repro.disagg): ``--disagg`` splits the engine
+into a prefill role and a decode role with KV page migration between
+their pools; ``--prefill-devices N --decode-devices M`` additionally
+puts the roles on disjoint device subsets (each role needs >= 1
+device — the launcher force-emulates N+M host devices when XLA_FLAGS
+is not already set).
 """
 from __future__ import annotations
 
@@ -32,12 +39,14 @@ def _parse_mesh(arg: str):
     return n_model, n_data
 
 
-def _early_mesh_arg():
-    """--mesh must be seen BEFORE jax locks the device count on import."""
+def _early_arg(name: str):
+    """Scan argv for ``--name VALUE`` / ``--name=VALUE`` BEFORE argparse
+    runs — mesh/device degrees must be known before jax locks the
+    process's device count on import."""
     for i, arg in enumerate(sys.argv):
-        if arg == "--mesh" and i + 1 < len(sys.argv):
+        if arg == name and i + 1 < len(sys.argv):
             return sys.argv[i + 1]
-        if arg.startswith("--mesh="):
+        if arg.startswith(name + "="):
             return arg.split("=", 1)[1]
     return None
 
@@ -46,12 +55,23 @@ def _early_mesh_arg():
 # repro.launch.serve): importing this module must never read argv, call
 # sys.exit, or change the process's jax device count.
 if __name__ == "__main__":
-    _mesh_arg = _early_mesh_arg()
+    _mesh_arg = _early_arg("--mesh")
     if _mesh_arg is not None and "XLA_FLAGS" not in os.environ:
         n_model, n_data = _parse_mesh(_mesh_arg)
         n_dev = n_model * (n_data or 1)
         os.environ["XLA_FLAGS"] = \
             f"--xla_force_host_platform_device_count={n_dev}"
+    _pre_arg = _early_arg("--prefill-devices")
+    _dec_arg = _early_arg("--decode-devices")
+    if _pre_arg is not None and _dec_arg is not None \
+            and "XLA_FLAGS" not in os.environ:
+        try:
+            _n_role = int(_pre_arg) + int(_dec_arg)
+        except ValueError:
+            _n_role = 0            # argparse will reject it properly
+        if _n_role > 0:
+            os.environ["XLA_FLAGS"] = \
+                f"--xla_force_host_platform_device_count={_n_role}"
 
 from repro.api import CompressionSpec, Engine
 from repro.configs import get, reduced
@@ -96,7 +116,34 @@ def main():
                     help="tensor-parallel serving mesh, MODEL or "
                          "MODELxDATA (e.g. 4x2); sized via "
                          "launch.mesh.make_host_mesh")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: a prefill role and a "
+                         "decode role with KV page migration "
+                         "(repro.disagg)")
+    ap.add_argument("--prefill-slots", type=int, default=4,
+                    help="prefill-role batch slots (with --disagg)")
+    ap.add_argument("--decode-slots", type=int, default=4,
+                    help="decode-role batch slots (with --disagg)")
+    ap.add_argument("--prefill-devices", type=int, default=None,
+                    help="devices for the prefill role's mesh (with "
+                         "--disagg; requires --decode-devices)")
+    ap.add_argument("--decode-devices", type=int, default=None,
+                    help="devices for the decode role's mesh (with "
+                         "--disagg; requires --prefill-devices)")
     args = ap.parse_args()
+
+    if (args.prefill_devices is not None) != (args.decode_devices is not None):
+        ap.error("--prefill-devices and --decode-devices go together")
+    if args.prefill_devices is not None:
+        if not args.disagg:
+            ap.error("--prefill-devices/--decode-devices need --disagg")
+        if args.prefill_devices < 1 or args.decode_devices < 1:
+            ap.error("each disaggregated role needs at least one device "
+                     f"(got prefill={args.prefill_devices}, "
+                     f"decode={args.decode_devices})")
+    if args.disagg and args.mesh is not None:
+        ap.error("--mesh and --disagg are mutually exclusive; give the "
+                 "roles devices via --prefill-devices/--decode-devices")
 
     mesh = None
     if args.mesh is not None:
@@ -124,19 +171,31 @@ def main():
     arrivals = generate(spec)
     max_len = 128
 
+    disagg = None
+    if args.disagg:
+        disagg = {"prefill_slots": args.prefill_slots,
+                  "decode_slots": args.decode_slots,
+                  "prefill_devices": args.prefill_devices,
+                  "decode_devices": args.decode_devices}
     sess = eng.session(batch_slots=args.slots, max_len=max_len,
                        kv_cache=args.kv_cache,
                        kv_pool_pages=args.kv_pool_pages,
                        scheduler=SchedConfig(
                            policy=args.policy, chunk=args.chunk,
                            prefix_cache=args.prefix_cache),
-                       mesh=mesh)
+                       mesh=mesh, disagg=disagg)
+    pre = sess.pre if args.disagg else sess
     print(f"[serve] workload={args.workload} seed={args.seed} "
-          f"kv={sess.kv_cache} chunk={sess.chunk} policy={args.policy}")
+          f"kv={pre.kv_cache} chunk={pre.chunk} policy={args.policy}"
+          + (" disagg" if args.disagg else ""))
     t0 = time.perf_counter()
     results = sess.run_workload(arrivals)
     dt = time.perf_counter() - t0
-    m = summarize(sess.records, dt, sess.stats["steps"])
+    if args.disagg:
+        steps = sess.pre.stats["steps"] + sess.dec.stats["steps"]
+        m = summarize(sess.records, dt, steps, roles=sess.role_stats())
+    else:
+        m = summarize(sess.records, dt, sess.stats["steps"])
     print(f"[serve] {m['completed']}/{m['requests']} requests, "
           f"{m['tokens']} tokens, {m['tok_per_s']:.1f} tok/s, "
           f"goodput {m['goodput_req_per_s']:.2f} req/s "
@@ -146,7 +205,21 @@ def main():
               f"p99 {m['ttft_s']['p99']*1e3:.0f} ms; "
               f"preemptions {m['preemptions']}, "
               f"prefix pages reused {m['prefix_pages_reused']}")
-    if sess.kv_cache == "paged":
+    if args.disagg:
+        roles, hand = m["roles"], m.get("handoff")
+        line = (f"[serve] roles: prefill {roles['prefill']['steps']} "
+                f"steps ({roles['prefill']['utilization'] or 0:.0%} busy),"
+                f" decode {roles['decode']['steps']} steps "
+                f"({roles['decode']['utilization'] or 0:.0%} busy)")
+        if hand:
+            line += (f"; handoffs {hand['count']}, mean latency "
+                     f"{hand['latency_s']['mean']*1e3:.1f} ms, "
+                     f"{hand['migrated_bytes']} bytes migrated")
+        print(line)
+        print(f"[serve] pages: prefill peak {sess.pre.stats['pages_peak']}"
+              f" / decode peak {sess.dec.stats['pages_peak']}, "
+              f"leaked {sess.pre.alloc.in_use + sess.dec.alloc.in_use}")
+    elif sess.kv_cache == "paged":
         print(f"[serve] pages: peak {sess.stats['pages_peak']}, "
               f"allocs {sess.stats['page_allocs']}, "
               f"reclaimed(SWA) {sess.stats['pages_reclaimed_swa']}")

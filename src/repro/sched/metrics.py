@@ -10,6 +10,18 @@ Step-denominated numbers (`first_token_calls`, preemptions, prefix
 pages) are deterministic for a given workload — those carry the hard CI
 assertions; wall-clock numbers (TTFT seconds, tok/s, goodput) are the
 host-noisy trajectory signal and get the usual dual-unit tolerance.
+
+Rate fields guard their denominators: a zero-span or zero-step run (a
+tiny CI workload that completes inside one clock quantum, or an empty
+request list) reports ``None`` for tok/s / goodput / utilization instead
+of raising or fabricating an absurd rate.
+
+Disaggregated serving adds two record families: per-request *handoff*
+fields (``handoff_latency_s``, ``migrated_pages``, ``migrated_bytes``,
+stamped by the decode role when it admits a migrated prompt) are folded
+into a ``"handoff"`` sub-record, and a ``roles=`` dict of per-role step
+counters becomes ``"roles"`` with per-role utilization (busy ticks over
+total ticks).
 """
 from __future__ import annotations
 
@@ -34,13 +46,44 @@ def _dist(values: Sequence[float], scale: float = 1.0) -> Optional[dict]:
             "p99": round(percentile(vs, 99), 4)}
 
 
+def _rate(num: float, denom: float, digits: int = 2) -> Optional[float]:
+    """num/denom, or None when the denominator is degenerate (zero-span
+    runs must not crash or report infinite rates)."""
+    if denom is None or denom <= 0:
+        return None
+    return round(num / denom, digits)
+
+
+def _handoff(records: Sequence[Dict]) -> Optional[dict]:
+    """Fold the disagg handoff fields (absent on co-located runs)."""
+    hs = [r for r in records if r.get("handoff_latency_s") is not None]
+    if not hs:
+        return None
+    n = len(hs)
+    return {
+        "count": n,
+        "latency_s": _dist([r["handoff_latency_s"] for r in hs]),
+        "latency_ticks": _dist([r["handoff_ticks"] for r in hs
+                                if r.get("handoff_ticks") is not None]),
+        "migrated_pages": sum(r.get("migrated_pages", 0) for r in hs),
+        "migrated_bytes": sum(r.get("migrated_bytes", 0) for r in hs),
+        "bytes_per_request": _rate(
+            sum(r.get("migrated_bytes", 0) for r in hs), n, 1),
+    }
+
+
 def summarize(records: Sequence[Dict], span_seconds: float,
-              steps: int) -> dict:
+              steps: int, roles: Optional[Dict[str, Dict]] = None) -> dict:
     """Fold per-request lifecycle records into the serving summary.
 
     records: dicts with prompt_len, max_new, n_generated, submit_time,
     first_token_time, finish_time, submit_step, admit_step,
     first_token_step, preemptions, prefix_pages (absent fields skipped).
+
+    roles: optional per-role counters for disaggregated serving —
+    ``{"prefill": {"steps": n, "busy_ticks": b}, "decode": {...}}`` plus
+    a ``"ticks"`` total under the key ``"_ticks"``; folded into a
+    ``"roles"`` record with per-role utilization.
     """
     done = [r for r in records if r.get("finish_time") is not None]
     ttft = [r["first_token_time"] - r["submit_time"] for r in records
@@ -53,20 +96,41 @@ def summarize(records: Sequence[Dict], span_seconds: float,
     first_calls = [r["first_token_step"] - r["admit_step"] for r in records
                    if r.get("first_token_step") is not None
                    and r.get("admit_step") is not None]
+    # scheduling-clock TTFT, comparable across engine shapes: a
+    # disaggregated run stamps submit/first-token in orchestrator ticks
+    # (one tick = one scheduling opportunity per role); a co-located run
+    # falls back to the model-call step clock, which is its tick
+    ttft_sched = [r["first_token_tick"] - r["submit_tick"] for r in records
+                  if r.get("first_token_tick") is not None
+                  and r.get("submit_tick") is not None] or \
+                 [r["first_token_step"] - r["submit_step"] for r in records
+                  if r.get("first_token_step") is not None
+                  and r.get("submit_step") is not None]
     n_tok = sum(r["n_generated"] for r in done)
-    span = max(span_seconds, 1e-9)
-    return {
+    out = {
         "requests": len(records),
         "completed": len(done),
         "tokens": n_tok,
         "seconds": round(span_seconds, 4),
         "steps": steps,
-        "tok_per_s": round(n_tok / span, 2),
-        "goodput_req_per_s": round(len(done) / span, 3),
+        "tok_per_s": _rate(n_tok, span_seconds),
+        "goodput_req_per_s": _rate(len(done), span_seconds, 3),
         "ttft_s": _dist(ttft),
+        "ttft_sched": _dist(ttft_sched),
         "tpot_s": _dist(tpot),
         "first_token_calls": _dist(first_calls) if first_calls else None,
         "preemptions": sum(r.get("preemptions", 0) for r in records),
         "prefix_pages_reused": sum(r.get("prefix_pages", 0)
                                    for r in records),
     }
+    hand = _handoff(records)
+    if hand is not None:
+        out["handoff"] = hand
+    if roles:
+        ticks = roles.get("_ticks")
+        out["roles"] = {
+            name: {"steps": rec.get("steps"),
+                   "utilization": _rate(rec.get("busy_ticks", 0),
+                                        ticks, 3)}
+            for name, rec in roles.items() if name != "_ticks"}
+    return out

@@ -9,7 +9,11 @@ and device state.  Separation of concerns:
   request that does not fit blocks the ones behind it: deterministic,
   starvation-free); ``sjf`` (shortest-prompt-first) picks the smallest
   admissible prompt, which maximizes slot turnover under heterogeneous
-  workloads at the cost of possible starvation of long prompts.
+  workloads.  Starvation of long prompts is bounded by an *aging*
+  knob: a request waiting more than ``sjf_age_limit`` steps is
+  promoted to head-of-line (oldest first) and, like a fifo head,
+  blocks everything behind it until it fits — so no prompt waits
+  forever behind a stream of shorter ones.
 * **admission control** — a request is admitted only when its
   *worst-case* page need (every token it could ever hold live,
   ``ceil(min(prompt+max_new, max_len)/page_size)`` minus pages it will
@@ -45,6 +49,8 @@ class SchedConfig:
     chunk: int = 1                # prefill tokens per model call (1 = off)
     admission: bool = True        # page-pool admission control
     prefix_cache: bool = False    # shared-prefix page reuse (paged only)
+    sjf_age_limit: Optional[int] = 256  # steps before an sjf entry is
+    #                             # promoted head-of-line (None = starve)
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -52,6 +58,10 @@ class SchedConfig:
                              f"choose one of {POLICIES}")
         if self.chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if self.sjf_age_limit is not None and self.sjf_age_limit < 1:
+            raise ValueError(
+                f"sjf_age_limit must be >= 1 (or None), "
+                f"got {self.sjf_age_limit}")
 
     @classmethod
     def coerce(cls, val) -> "SchedConfig":
@@ -109,18 +119,37 @@ class Scheduler:
         self.queue.appendleft(entry)
 
     # -------------------------------------------------------- admission
-    def next_entry(self, fits: Callable[[SchedEntry], bool]
-                   ) -> Optional[SchedEntry]:
+    def _aged(self, step: Optional[int]) -> List[int]:
+        """Queue indices whose wait exceeds the sjf aging bound, oldest
+        first (submit_step, then queue position — deterministic)."""
+        k = self.cfg.sjf_age_limit
+        if k is None or step is None:
+            return []
+        aged = [i for i in range(len(self.queue))
+                if step - self.queue[i].submit_step > k]
+        return sorted(aged, key=lambda i: (self.queue[i].submit_step, i))
+
+    def next_entry(self, fits: Callable[[SchedEntry], bool],
+                   step: Optional[int] = None) -> Optional[SchedEntry]:
         """Pop the next admissible entry per policy, or None.  ``fits``
         is the Session's page-need predicate (always-True when admission
-        control is off or the cache is dense)."""
+        control is off or the cache is dense); ``step`` is the caller's
+        model-call clock, used only for the sjf aging bound."""
         if not self.queue:
             return None
+        aged: List[int] = []
         if self.cfg.policy == "sjf":
-            order = sorted(range(len(self.queue)),
-                           key=lambda i: (len(self.queue[i].req.prompt)
-                                          + len(self.queue[i].out),
-                                          i))
+            aged = self._aged(step)
+            if aged:
+                # an over-age entry behaves like a fifo head: it goes
+                # next and, if it does not fit, blocks — otherwise a
+                # stream of short prompts starves it forever
+                order = aged[:1]
+            else:
+                order = sorted(range(len(self.queue)),
+                               key=lambda i: (len(self.queue[i].req.prompt)
+                                              + len(self.queue[i].out),
+                                              i))
         else:                      # fifo: strict head-of-line
             order = [0]
         for i in order:
@@ -133,7 +162,7 @@ class Scheduler:
                 self._seq += 1
                 return e
             self.stats["admission_blocks"] += 1
-            if self.cfg.policy == "fifo":
+            if self.cfg.policy == "fifo" or aged:
                 return None        # head-of-line blocks
         return None
 

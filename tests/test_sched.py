@@ -334,6 +334,58 @@ def test_idle_fast_forward_keeps_step_count_honest(params):
     assert sess.stats["steps"] == 5   # 3 calls for rid 0 + 2 for rid 1
 
 
+# ---------------------------------------------------------- sjf aging
+def test_sjf_aging_promotes_starved_long_prompt():
+    """A long prompt waiting past ``sjf_age_limit`` steps jumps the
+    shortest-first order — deterministic promotion, oldest first."""
+    s = schd.Scheduler(schd.SchedConfig(policy="sjf", sjf_age_limit=5))
+    s.submit(Request(prompt=[1] * 9, rid=0), step=0)
+    s.submit(Request(prompt=[1] * 2, rid=1), step=1)
+    # inside the bound: plain shortest-prompt-first
+    assert s.next_entry(lambda e: True, step=3).req.rid == 1
+    s.submit(Request(prompt=[1] * 2, rid=2), step=4)
+    # rid 0 has now waited 6 > 5 steps: promoted over the shorter rid 2
+    assert s.next_entry(lambda e: True, step=6).req.rid == 0
+    assert s.next_entry(lambda e: True, step=6).req.rid == 2
+
+
+def test_sjf_aged_head_blocks_like_fifo():
+    """An over-age entry that does not fit must BLOCK admission (like a
+    fifo head) — otherwise short prompts starve it forever."""
+    s = schd.Scheduler(schd.SchedConfig(policy="sjf", sjf_age_limit=2))
+    s.submit(Request(prompt=[1] * 9, rid=0), step=0)
+    s.submit(Request(prompt=[1], rid=1), step=0)
+    fits = lambda e: len(e.req.prompt) < 5
+    assert s.next_entry(fits, step=1).req.rid == 1   # not yet aged
+    s.submit(Request(prompt=[1], rid=2), step=1)
+    assert s.next_entry(fits, step=5) is None        # aged head blocks
+    assert len(s) == 2
+    assert s.stats["admission_blocks"] == 1
+
+
+def test_sjf_age_limit_none_never_promotes():
+    s = schd.Scheduler(schd.SchedConfig(policy="sjf",
+                                        sjf_age_limit=None))
+    s.submit(Request(prompt=[1] * 9, rid=0), step=0)
+    s.submit(Request(prompt=[1], rid=1), step=10_000)
+    assert s.next_entry(lambda e: True, step=10_000).req.rid == 1
+    with pytest.raises(ValueError, match="sjf_age_limit"):
+        schd.SchedConfig(policy="sjf", sjf_age_limit=0)
+
+
+def test_metrics_zero_span_reports_none():
+    """Zero-span / zero-step summaries report None rates instead of
+    raising ZeroDivisionError (empty workloads, instant drains)."""
+    m = schd.summarize([], 0.0, 0)
+    assert m["tok_per_s"] is None
+    assert m["goodput_req_per_s"] is None
+    assert m["requests"] == 0
+    m2 = schd.summarize([], 0.0, 0,
+                        roles={"prefill": {"steps": 0, "busy_ticks": 0},
+                               "_ticks": 0})
+    assert m2["roles"]["prefill"]["utilization"] is None
+
+
 # ------------------------------------------------------- hypothesis sweep
 try:
     from hypothesis import given, settings, strategies as st
