@@ -47,6 +47,13 @@ And the disaggregated-serving section ("disagg"):
     than co-located — the deterministic form of the latency win;
   * wall throughput gates dual-unit (absolute OR disagg/co-located
     ratio vs baseline).
+
+And the resilience section ("resil"):
+  * under every built-in fault preset the burst workload must complete
+    all requests with token streams identical to the fault-free run,
+    zero leaked pages, and counters identical across a same-seed
+    replay — all deterministic, all gate hard (goodput_vs_clean is
+    trajectory only).
 """
 from __future__ import annotations
 
@@ -98,6 +105,50 @@ def check(new: dict, base: dict, tol: float, log=print) -> bool:
     ok &= check_serving(new, base, tol, log=log)
     ok &= check_sharding(new, base, tol, log=log)
     ok &= check_disagg(new, base, tol, log=log)
+    ok &= check_resil(new, base, tol, log=log)
+    return ok
+
+
+def check_resil(new: dict, base: dict, tol: float, log=print) -> bool:
+    """Resilience gate — every fact here is deterministic and gates
+    hard.  Under each built-in fault preset the burst workload must:
+    complete every request (faults delay, they must not lose work),
+    keep every completed token stream identical to the fault-free run
+    (greedy decode + recompute-retry means faults can reorder, never
+    rewrite), leak zero pages on either role's pool, and produce
+    identical counters on a same-(seed,preset) replay.  No wall-clock
+    fields gate — goodput_vs_clean is trajectory only."""
+    rs = new.get("resil")
+    if rs is None:
+        log("  resil section MISSING from new run")
+        return False
+    ok = True
+    if rs.get("clean", {}).get("pages_leaked") != 0:
+        log(f"  resil clean run leaked "
+            f"{rs.get('clean', {}).get('pages_leaked')} pages")
+        ok = False
+    n_req = rs.get("clean", {}).get("completed")
+    for preset, rec in sorted(rs.get("presets", {}).items()):
+        bad = []
+        if not rec.get("token_parity"):
+            bad.append("token parity LOST")
+        if rec.get("pages_leaked") != 0:
+            bad.append(f"{rec.get('pages_leaked')} pages leaked")
+        if not rec.get("deterministic"):
+            bad.append("replay diverged (counters/tokens)")
+        if rec.get("completed") != n_req or rec.get("failed"):
+            bad.append(f"completed {rec.get('completed')}/{n_req}, "
+                       f"failed {rec.get('failed')}")
+        if bad:
+            log(f"  resil[{preset}] " + "; ".join(bad))
+            ok = False
+    if ok:
+        n_faults = sum(sum((rec.get("counters") or {})
+                           .get("faults", {}).values())
+                       for rec in rs.get("presets", {}).values())
+        log(f"  resil      {len(rs.get('presets', {}))} presets x "
+            f"{n_req} requests: parity OK, 0 leaks, replay-deterministic "
+            f"({n_faults} faults injected)  OK")
     return ok
 
 

@@ -142,6 +142,21 @@ def bench_api(out_path: str = "BENCH_api.json") -> dict:
               f"{sv['preemption']['completed']}/"
               f"{sv['preemption']['requests']} completed, "
               f"{sv['preemption']['pages_leaked']} pages leaked")
+    rs = data.get("resil")
+    if rs:
+        worst = None
+        for preset, rec in sorted(rs["presets"].items()):
+            g = rec.get("goodput_vs_clean")
+            if g is not None and (worst is None or g < worst[1]):
+                worst = (preset, g)
+        all_ok = all(rec["token_parity"] and rec["pages_leaked"] == 0
+                     and rec["deterministic"]
+                     for rec in rs["presets"].values())
+        print(f"  resil[{rs['mode']}]   {len(rs['presets'])} fault presets"
+              f" x {rs['clean']['completed']} requests: "
+              f"{'parity OK, 0 leaks, deterministic' if all_ok else 'FAIL'}"
+              + (f"; worst goodput {worst[1]:.2f}x clean ({worst[0]})"
+                 if worst else ""))
     sh = data.get("sharding")
     if sh:
         print(f"  sharding[{sh['mode']}] mesh {sh['n_model']}x"

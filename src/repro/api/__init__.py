@@ -26,6 +26,7 @@ __all__ = [
     "CompressionSpec", "FCProblem", "MODES", "WORKLOADS",
     "BackendRegistry", "Capabilities", "CapabilityError", "Executor",
     "backend_names", "get_backend", "register_backend",
+    "RequestFailed", "ResilConfig", "FaultPlan",
 ]
 
 _LAZY = {
@@ -34,6 +35,11 @@ _LAZY = {
     "Request": ("repro.api.session", "Request"),
     "Result": ("repro.api.session", "Result"),
     "compress_params": ("repro.api.compress", "compress_params"),
+    # resilience layer (Engine.session(resil=...)) — re-exported for the
+    # common "catch structured failures / build a fault plan" imports
+    "RequestFailed": ("repro.resil", "RequestFailed"),
+    "ResilConfig": ("repro.resil", "ResilConfig"),
+    "FaultPlan": ("repro.resil", "FaultPlan"),
 }
 
 

@@ -136,7 +136,7 @@ class Engine:
                 page_size: int = 16,
                 kv_pool_pages: Optional[int] = None,
                 kv_dtype: Optional[str] = None,
-                scheduler=None, mesh=None, disagg=None):
+                scheduler=None, mesh=None, disagg=None, resil=None):
         """A continuous-batching serving session on the active backend.
 
         ``scheduler``: a sched.SchedConfig (or dict / policy name) —
@@ -168,9 +168,23 @@ class Engine:
         session additionally pre-tunes the paged-attention impl/tile
         choice for this (geometry, batch, backend); a mesh session tunes
         the *shard-local* FC geometries its shard_map kernels will run.
+
+        ``resil``: a `repro.resil.ResilConfig` (or dict / ``"preset:seed"``
+        fault-plan string) — deterministic fault injection, request
+        deadlines, bounded retry, load shedding, and graceful
+        degradation.  Passing a live `ResilState` carries the degradation
+        ladder across session generations: when sustained page pressure
+        has pushed it to L2, this session's KV pool is demoted to int8.
+        ``resil=None`` (default) is the exact pre-resil serving path.
         """
         if self.cfg is None:
             raise ValueError("serving needs an ArchConfig")
+        if resil is not None:
+            from repro import resil as rsl
+            if isinstance(resil, rsl.ResilState):
+                # next-session degradation boundary: pool dtype is fixed
+                # for a live session, so L2 demotion lands here
+                kv_dtype = resil.next_kv_dtype(kv_dtype)
         backend = self.backend
         if not backend.caps.batched_decode:
             raise CapabilityError(
@@ -205,7 +219,7 @@ class Engine:
                 self.cfg, self.params, disagg=d, max_len=max_len,
                 seed=seed, backend=backend, page_size=page_size,
                 kv_dtype=kv_dtype, scheduler=scheduler,
-                prefill_plan=pre_plan, decode_plan=dec_plan)
+                prefill_plan=pre_plan, decode_plan=dec_plan, resil=resil)
         plan = None
         if mesh is not None:
             from repro import shard as shardmod
@@ -216,20 +230,22 @@ class Engine:
                        max_len=max_len, seed=seed, backend=backend,
                        kv_cache=kv_cache, page_size=page_size,
                        kv_pool_pages=kv_pool_pages, kv_dtype=kv_dtype,
-                       scheduler=scheduler, plan=plan)
+                       scheduler=scheduler, plan=plan, resil=resil)
 
     def serve(self, requests: Sequence[Union[Request, List[int]]],
               *, batch_slots: int = 4, max_len: int = 256,
               max_steps: int = 10_000, seed: int = 0,
               kv_cache: Optional[str] = None,
-              scheduler=None, disagg=None) -> List[Result]:
+              scheduler=None, disagg=None, resil=None) -> List[Result]:
         """Serve a batch of requests to completion (continuous batching).
         Results come back in deterministic rid order.  ``disagg`` routes
         through a disaggregated prefill/decode session pair — greedy
-        results are token-identical either way."""
+        results are token-identical either way.  ``resil`` activates the
+        resilience layer (deadlines/retry/fault injection)."""
         sess = self.session(batch_slots=batch_slots, max_len=max_len,
                             seed=seed, kv_cache=kv_cache,
-                            scheduler=scheduler, disagg=disagg)
+                            scheduler=scheduler, disagg=disagg,
+                            resil=resil)
         for rid, req in enumerate(requests):
             if not isinstance(req, Request):
                 req = Request(prompt=list(req), rid=rid)
@@ -594,6 +610,102 @@ class Engine:
             out["disagg"].pop("tokens_by_rid")
         return out
 
+    def resil_benchmark(self, mode: str = "aida", density: float = 0.25,
+                        chunk: int = 8, page_size: int = 8,
+                        max_len: int = 64, n_requests: int = 8,
+                        seed: int = 0) -> dict:
+        """The `"resil"` section of BENCH_api.json: the burst workload
+        through the disaggregated engine under every built-in FaultPlan
+        preset, against a fault-free baseline.
+
+        Deterministic facts carry the CI gate: every request completes,
+        completed token streams are identical to the fault-free run,
+        zero pages leak on either role's allocator, and the
+        shed/retry/deadline-miss/fault counters are identical across two
+        replays of the same ``(seed, preset)``.  The goodput ratio vs
+        clean is the wall-clock trajectory signal."""
+        from repro import sched as schd
+        cfg = self.cfg
+        if cfg is None or not schd.supports_chunked_prefill(cfg):
+            raise CapabilityError(
+                "resil_benchmark drives the disaggregated engine; it "
+                "needs an arch whose per-request state is entirely KV "
+                "pages (sched.supports_chunked_prefill)")
+        eng = Engine(cfg, params=self.params)
+        if mode != "dense":
+            eng.compress(CompressionSpec(mode=mode, density=density),
+                         verbose=None)
+        wl = schd.WorkloadSpec.preset("burst", n_requests=n_requests,
+                                      vocab=cfg.vocab, seed=0)
+        arrivals = schd.generate(wl)
+
+        def replay():
+            return [(t, Request(prompt=list(r.prompt), max_new=r.max_new,
+                                rid=r.rid)) for t, r in arrivals]
+
+        sched_cfg = {"chunk": chunk}
+        dcfg = {"prefill_slots": 2, "decode_slots": 4}
+
+        def run(resil):
+            sess = eng.session(max_len=max_len, kv_cache="paged",
+                               page_size=page_size, scheduler=sched_cfg,
+                               disagg=dict(dcfg), resil=resil)
+            t0 = time.perf_counter()
+            res = sess.run_workload(replay(), on_incomplete="warn")
+            dt = time.perf_counter() - t0
+            n_tok = sum(len(r.tokens) for r in res)
+            counters = None
+            if resil is not None:
+                s = sess.resil_summary()
+                counters = {k: s.get(k, 0) for k in
+                            ("deadline_miss", "shed", "retries", "failed",
+                             "fault_steps", "handoff_fallbacks")}
+                counters["faults"] = s.get("faults", {})
+            return {"tokens_by_rid": {r.rid: r.tokens for r in res},
+                    "completed": len(res),
+                    "failed": sorted(f.rid for f in sess.failed),
+                    "tok_per_s": round(n_tok / dt, 2) if dt > 0 else None,
+                    "pages_leaked": sess.pre.alloc.in_use
+                    + sess.dec.alloc.in_use,
+                    "counters": counters}
+
+        # warm the compiled steps once so wall-clock ratios measure
+        # scheduling under faults, not XLA compilation
+        warm = eng.session(max_len=max_len, kv_cache="paged",
+                           page_size=page_size, scheduler=sched_cfg,
+                           disagg=dict(dcfg))
+        warm.submit(Request(prompt=[1] * (chunk + 1), max_new=2, rid=-1))
+        warm.run()
+        clean = run(None)
+        out = {"mode": mode, "workload": "burst", "requests": n_requests,
+               "seed": seed,
+               "clean": {"completed": clean["completed"],
+                         "tok_per_s": clean["tok_per_s"],
+                         "pages_leaked": clean["pages_leaked"]},
+               "presets": {}}
+        for preset in ("drop-handoff", "role-stall", "page-spike",
+                       "straggler"):
+            rcfg = {"fault_plan": f"{preset}:{seed}", "max_retries": 2,
+                    "watchdog_every": 4}
+            a = run(dict(rcfg))
+            b = run(dict(rcfg))   # replay: counters must be identical
+            parity = all(clean["tokens_by_rid"].get(rid) == toks
+                         for rid, toks in a["tokens_by_rid"].items())
+            out["presets"][preset] = {
+                "completed": a["completed"],
+                "failed": a["failed"],
+                "token_parity": parity,
+                "pages_leaked": a["pages_leaked"],
+                "deterministic": (a["counters"] == b["counters"]
+                                  and a["tokens_by_rid"]
+                                  == b["tokens_by_rid"]),
+                "counters": a["counters"],
+                "goodput_vs_clean": (
+                    round(a["tok_per_s"] / clean["tok_per_s"], 3)
+                    if a["tok_per_s"] and clean["tok_per_s"] else None),
+            }
+        return out
+
     def benchmark(self, modes: Sequence[str] = ("dense", "aida"),
                   requests: int = 4, max_new: int = 8,
                   batch_slots: int = 2, density: float = 0.25,
@@ -664,6 +776,11 @@ class Engine:
                 # TTFT-p99 — also CI-gated
                 out["disagg"] = self.disagg_benchmark(mode=kv_mode,
                                                       density=density)
+                # resilience section: burst under every FaultPlan preset
+                # — token parity vs clean, zero leaks, deterministic
+                # counters — also CI-gated
+                out["resil"] = self.resil_benchmark(mode=kv_mode,
+                                                    density=density)
         if problem is None:
             rng = np.random.default_rng(0)
             w = rng.integers(-15, 16, size=(24, 32)) \

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import kvstore as kvs
+from repro import resil as rsl
 from repro import sched as schd
 from repro.api import env
 from repro.api.registry import Executor, get_backend
@@ -98,12 +99,27 @@ class Request:
     max_new: int = 16
     temperature: float = 0.0
     rid: int = 0
+    # per-request completion budget in ticks from submit (overrides
+    # ResilConfig.deadline_ticks; None = use the session default)
+    deadline_ticks: Optional[int] = None
 
 
 @dataclasses.dataclass
 class Result:
     rid: int
     tokens: List[int]
+
+
+def _unserved_record(req: "Request") -> dict:
+    """Lifecycle record for a request that never reached submit() —
+    same schema as Session.submit's records, terminal state 'unserved'."""
+    return {"rid": req.rid, "prompt_len": len(req.prompt),
+            "max_new": req.max_new, "submit_step": None,
+            "submit_time": None, "admit_step": None, "admit_time": None,
+            "first_token_step": None, "first_token_time": None,
+            "finish_time": None, "n_generated": 0, "preemptions": 0,
+            "prefix_pages": 0, "state": "unserved",
+            "failed_reason": None, "retries": 0}
 
 
 class Session:
@@ -113,7 +129,7 @@ class Session:
                  kv_cache: Optional[str] = None, page_size: int = 16,
                  kv_pool_pages: Optional[int] = None,
                  kv_dtype: Optional[str] = None,
-                 scheduler=None, plan=None):
+                 scheduler=None, plan=None, resil=None):
         assert cfg.has_decode, "encoder archs don't serve autoregressively"
         from repro.models import model as M
         self.cfg, self.params = cfg, params
@@ -201,7 +217,17 @@ class Session:
         self.slot_out: List[List[int]] = [[] for _ in range(batch_slots)]
         self.slot_cache_j: List[int] = [0] * batch_slots
         self.results: List[Result] = []
+        self.failed: List[rsl.RequestFailed] = []
         self.records: List[dict] = []
+        # resilience layer: None (default) is the exact pre-resil path;
+        # a ResilState may be shared across roles (disagg) so counters
+        # aggregate in one place
+        if resil is None or isinstance(resil, rsl.ResilState):
+            self.resil = resil
+        else:
+            self.resil = rsl.ResilState(rsl.ResilConfig.coerce(resil))
+        self.role = "engine"       # disagg roles override ("prefill"/...)
+        self.tick = 0              # scheduling-opportunity clock
         self.stats = {"steps": 0, "fills": 0, "preemptions": 0,
                       "chunk": self.chunk}
         if kv_cache == "paged":
@@ -220,9 +246,13 @@ class Session:
                "submit_time": entry.submit_time, "admit_step": None,
                "admit_time": None, "first_token_step": None,
                "first_token_time": None, "finish_time": None,
-               "n_generated": 0, "preemptions": 0, "prefix_pages": 0}
+               "n_generated": 0, "preemptions": 0, "prefix_pages": 0,
+               "state": "queued", "failed_reason": None, "retries": 0}
         entry.record = rec
         self.records.append(rec)
+        if self.resil is not None:
+            entry.deadline_tick = self.resil.deadline_for(req, self.tick)
+            rec["deadline_tick"] = entry.deadline_tick
 
     def run(self, max_steps: int = 10_000,
             on_incomplete: str = "raise") -> List[Result]:
@@ -247,10 +277,20 @@ class Session:
         # model calls only)
         clock = self.stats["steps"]
         for _ in range(max_steps):
+            self.tick = clock
             while pending and pending[0][0] <= clock:
                 self.submit(pending.popleft()[1])
+            if self.resil is not None:
+                self._resil_tick(clock)
             self._fill_slots()
             if all(e is None for e in self.slot_entry):
+                if self._fault_waiting():
+                    # an injected page spike is holding the pool hostage;
+                    # burn the tick so the window can pass instead of
+                    # misreading it as an admission deadlock
+                    self.resil.count("wait_ticks")
+                    clock += 1
+                    continue
                 if len(self.sched):
                     self._incomplete(on_incomplete, blocked=True,
                                      pending=pending)
@@ -259,7 +299,20 @@ class Session:
                     clock = pending[0][0]
                     continue
                 break
-            self._advance()
+            try:
+                self._advance()
+            except rsl.InjectedFault:
+                # deliberately injected step failure (role-stall /
+                # straggler): the tick is lost, the work is not
+                self.resil.count("fault_steps")
+            except kvs.OutOfPages:
+                if self.resil is not None and self.alloc is not None \
+                        and self.alloc.holdback > 0:
+                    # page-spike squeezed even the last runner; wait the
+                    # window out (pages come back, recompute resumes)
+                    self.resil.count("wait_ticks")
+                else:
+                    raise
             clock += 1
         else:
             self._incomplete(on_incomplete, blocked=False, pending=pending)
@@ -268,8 +321,17 @@ class Session:
     # ----------------------------------------------------------- internals
     def _incomplete(self, on_incomplete: str, blocked: bool,
                     pending: Sequence[Tuple[int, Request]] = ()) -> None:
-        unfinished = [e.req.rid for e in self.slot_entry if e is not None]
-        unfinished += [e.req.rid for e in self.sched.queue]
+        live = [e for e in self.slot_entry if e is not None]
+        live += list(self.sched.queue)
+        # terminal lifecycle state for everything that never finished —
+        # including arrivals still pending at max_steps exhaustion, which
+        # previously left no record at all (metrics denominators lied)
+        for e in live:
+            if e.record is not None and e.record.get("state") == "queued":
+                e.record["state"] = "unserved"
+        for _, req in pending:
+            self.records.append(_unserved_record(req))
+        unfinished = [e.req.rid for e in live]
         unfinished += [req.rid for _, req in pending]  # never submitted
         if not unfinished or on_incomplete == "ignore":
             return
@@ -283,6 +345,88 @@ class Session:
             warnings.warn(msg, RuntimeWarning, stacklevel=3)
             return
         raise kvs.OutOfPages(msg) if blocked else RuntimeError(msg)
+
+    # ------------------------------------------------------- resil layer
+    def resil_summary(self) -> Optional[dict]:
+        """Shed/retry/deadline-miss/fault counters, or None when the
+        resilience layer is off."""
+        return None if self.resil is None else self.resil.summary()
+
+    def _fault_waiting(self) -> bool:
+        """True when idleness is an injected condition (page spike), not
+        an admission deadlock — the caller should burn the tick."""
+        return (self.resil is not None and self.alloc is not None
+                and self.alloc.holdback > 0)
+
+    def _resil_tick(self, tick: int) -> None:
+        """Per-tick policy: apply the fault plan's page holdback, expire
+        deadlines, shed load past the watermark, walk the degradation
+        ladder, run the watchdog audit."""
+        r = self.resil
+        if r.plan is not None and self.alloc is not None:
+            self.alloc.holdback = r.plan.page_holdback(
+                self.alloc.n_pages - 1, tick, role=self.role)
+        self._expire_queue_deadlines(tick)
+        self._expire_slot_deadlines(tick)
+        if r.cfg.shed_watermark is not None and self.alloc is not None:
+            self._shed_load()
+        if r.degrade is not None and self.alloc is not None:
+            usable = max(1, self.alloc.n_pages - 1)
+            if r.degrade.update(self.alloc.available / usable) >= 1 \
+                    and self.prefix is not None:
+                self.prefix.release(self.alloc, 1)  # L1: drop LRU pins
+        if r.watchdog is not None and r.watchdog.due(tick):
+            r.count("watchdog_audits")
+            r.watchdog.audit(self)
+
+    def _expire_queue_deadlines(self, tick: int) -> None:
+        for e in self.sched.pop_expired(tick):
+            self.resil.count("deadline_miss")
+            self._fail_entry(e, "deadline")
+
+    def _expire_slot_deadlines(self, tick: int) -> None:
+        for i, entry in enumerate(self.slot_entry):
+            if entry is None or entry.deadline_tick is None \
+                    or tick <= entry.deadline_tick:
+                continue
+            entry.out = list(self.slot_out[i])
+            if self.kv_cache == "paged":
+                self._release_slot_pages(i)
+            self.slot_entry[i] = None
+            self.slot_pending[i] = []
+            self.slot_out[i] = []
+            self.resil.count("deadline_miss")
+            self._fail_entry(entry, "deadline")
+
+    def _shed_load(self) -> None:
+        """Reject never-admitted queued work, youngest first, while the
+        queue's summed worst-case page need exceeds the watermark
+        fraction of the usable pool."""
+        r = self.resil
+        limit = r.cfg.shed_watermark * max(1, self.alloc.n_pages - 1)
+        total = sum(self._page_need(e) for e in self.sched.queue)
+        while total > limit:
+            e = self.sched.shed_youngest()
+            if e is None:
+                break
+            total -= self._page_need(e)
+            r.count("shed")
+            self._fail_entry(e, "shed")
+
+    def _fail_entry(self, entry: schd.SchedEntry, reason: str) -> None:
+        """Terminal structured failure: the request leaves the system as
+        a RequestFailed result, never an unhandled exception."""
+        rec = entry.record
+        if rec is not None:
+            rec["state"] = "failed"
+            rec["failed_reason"] = reason
+            rec["retries"] = entry.retries
+            rec["n_generated"] = len(entry.out)
+        self.failed.append(rsl.RequestFailed(
+            rid=entry.req.rid, reason=reason, tokens=list(entry.out),
+            retries=entry.retries))
+        if self.resil is not None:
+            self.resil.count("failed")
 
     def _page_need(self, entry: schd.SchedEntry) -> int:
         req = entry.req
@@ -335,6 +479,12 @@ class Session:
         if rec["admit_step"] is None:
             rec["admit_step"] = self.stats["steps"]
             rec["admit_time"] = now
+        if self.resil is not None and self.resil.degrade is not None \
+                and self.resil.degrade.kv_demote and not rec.get("degraded"):
+            # L2 degradation: this admission would get int8 KV in the next
+            # session generation (pool dtype is fixed per live session)
+            rec["degraded"] = True
+            self.resil.count("degraded_admissions")
         self.slot_entry[i] = entry
         # recompute resume: a preempted request re-prefills its prompt
         # PLUS its generated-so-far tokens, then continues sampling
@@ -548,6 +698,10 @@ class Session:
 
     # ------------------------------------------------------------ stepping
     def _advance(self):
+        if self.resil is not None and self.resil.plan is not None:
+            # fault seam: a stalled/straggling role loses the whole tick
+            # (raises InjectedFault before any state is touched)
+            self.resil.plan.check_step(self.role, self.tick)
         if self.chunk > 1 and any(self.slot_pending[i]
                                   for i, e in enumerate(self.slot_entry)
                                   if e is not None):
@@ -654,6 +808,7 @@ class Session:
             self.results.append(Result(req.rid, self.slot_out[i]))
             rec["finish_time"] = now
             rec["n_generated"] = len(self.slot_out[i])
+            rec["state"] = "completed"
             self.slot_entry[i] = None
             if self.kv_cache == "paged":
                 # return pages eagerly — don't wait for a refill

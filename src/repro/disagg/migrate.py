@@ -35,6 +35,11 @@ class Handoff:
     pages: List[int]
     pos: int
     tick: int = 0
+    # repro.resil: a fault-dropped/delayed handoff stays queued but is
+    # invisible to decode admission until ``ready_tick``; ``drops``
+    # counts delivery attempts lost to injected drops.
+    ready_tick: int = 0
+    drops: int = 0
 
     def live(self) -> List[Tuple[int, int]]:
         """(table_index, prefill_page_id) for every resident page."""

@@ -45,8 +45,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import kvstore as kvs
+from repro import resil as rsl
 from repro import sched as schd
-from repro.api.session import Request, Result, Session
+from repro.api.session import Request, Result, Session, _unserved_record
 from repro.disagg.migrate import Handoff, migrate_kv
 from repro.disagg.router import DisaggRouter
 
@@ -114,8 +115,10 @@ class PrefillSession(Session):
         entry = self.slot_entry[i]
         super()._emit(i, logits_i, now)
         # every prefill-role emit IS a first token (tick-denominated
-        # twin of the record's first_token_step stamp)
-        entry.record["first_token_tick"] = self.tick
+        # twin of the record's first_token_step stamp); a retried entry
+        # keeps its original stamp (TTFT measures the first delivery)
+        if entry.record.get("first_token_tick") is None:
+            entry.record["first_token_tick"] = self.tick
         if self.slot_entry[i] is None:
             return                     # max_new == 1: finished at prefill
         # first token emitted — detach the slot and hand the request off.
@@ -151,6 +154,14 @@ class DecodeSession(Session):
         assert self.kv_cache == "paged"
         self.stats.update({"handoffs": 0, "migrated_pages": 0,
                            "migrated_bytes": 0})
+
+    def _fits(self, entry: schd.SchedEntry) -> bool:
+        # resil fallback admission (co-located prefill on the decode
+        # role) must honor the same reservation discipline as handoffs —
+        # otherwise a fallback prompt could steal pages an admitted
+        # decoder is guaranteed, making decode preemption possible again
+        return self._page_need(entry) <= \
+            self.alloc.available - self._reserved_future()
 
     # ------------------------------------------------------- admission
     def _reserved_future(self) -> int:
@@ -231,19 +242,27 @@ class DisaggSession:
     def __init__(self, cfg, params, *, disagg: "DisaggConfig",
                  max_len: int = 256, seed: int = 0, backend=None,
                  page_size: int = 16, kv_dtype: Optional[str] = None,
-                 scheduler=None, prefill_plan=None, decode_plan=None):
+                 scheduler=None, prefill_plan=None, decode_plan=None,
+                 resil=None):
         d = DisaggConfig.coerce(disagg)
         self.dcfg = d
         backlog = d.max_backlog if d.max_backlog is not None \
             else d.decode_slots
         self.router = DisaggRouter(schd.SchedConfig.coerce(scheduler),
                                    max_backlog=backlog)
+        # one shared ResilState: both roles and the orchestrator count
+        # into the same stats, and the fault plan is consulted once
+        if resil is None or isinstance(resil, rsl.ResilState):
+            self.resil = resil
+        else:
+            self.resil = rsl.ResilState(rsl.ResilConfig.coerce(resil))
         self.pre = PrefillSession(
             cfg, params, batch_slots=d.prefill_slots, max_len=max_len,
             seed=seed, backend=backend, kv_cache="paged",
             page_size=page_size, kv_pool_pages=d.prefill_pool_pages,
             kv_dtype=kv_dtype, plan=prefill_plan,
-            router=self.router, on_handoff=self.router.push_handoff)
+            router=self.router, on_handoff=self._on_handoff,
+            resil=self.resil)
         # decode shares the prefill role's (possibly shard-prepared)
         # params — one model, two pools
         self.dec = DecodeSession(
@@ -251,7 +270,10 @@ class DisaggSession:
             batch_slots=d.decode_slots, max_len=max_len, seed=seed,
             backend=backend, kv_cache="paged", page_size=page_size,
             kv_pool_pages=d.decode_pool_pages, kv_dtype=kv_dtype,
-            plan=decode_plan)
+            plan=decode_plan, resil=self.resil)
+        self.pre.role = "prefill"
+        self.dec.role = "decode"
+        self._role_fail = {"prefill": 0, "decode": 0}  # fault streaks
         self.results: List[Result] = []   # merged at drain
         self.records = self.pre.records   # all requests enter via prefill
         self.ticks = 0
@@ -278,34 +300,52 @@ class DisaggSession:
             sorted(arrivals, key=lambda a: a[0]))
         clock = self.ticks
         for _ in range(max_steps):
-            self.pre.tick = self.ticks
+            self.pre.tick = self.dec.tick = self.ticks
             while pending and pending[0][0] <= clock:
                 self.submit(pending.popleft()[1])
+            if self.resil is not None:
+                self._resil_tick()
             self._admit_handoffs()
+            if self.dec.sched.queue:   # resil handoff-timeout fallback
+                self.dec._fill_slots()
             dec_busy = any(e is not None for e in self.dec.slot_entry)
-            if dec_busy:
-                self.dec._advance()
+            dec_ran = dec_busy and self._step_role(self.dec, "decode")
             self.pre._fill_slots()
             pre_busy = any(e is not None for e in self.pre.slot_entry)
-            if pre_busy:
-                self.pre._advance()
+            pre_ran = pre_busy and self._step_role(self.pre, "prefill")
             self.ticks += 1
             self.stats["ticks"] = self.ticks
-            self.stats["prefill_busy_ticks"] += int(pre_busy)
-            self.stats["decode_busy_ticks"] += int(dec_busy)
+            self.stats["prefill_busy_ticks"] += int(pre_ran)
+            self.stats["decode_busy_ticks"] += int(dec_ran)
             if not (pre_busy or dec_busy):
+                if self.resil is not None and self._fault_waiting():
+                    # idleness is injected (spike window / handoff not
+                    # yet redelivered) — let the clock run it out
+                    self.resil.count("wait_ticks")
+                    clock += 1
+                    continue
                 self.ticks -= 1        # idle: that tick did no work
                 self.stats["ticks"] = self.ticks
                 if self.router.handoff:
                     # both roles idle yet a handoff cannot land: the
                     # decode pool cannot hold even this one request
                     h = self.router.handoff[0]
-                    raise kvs.OutOfPages(
-                        f"decode page pool too small: request "
-                        f"{h.entry.req.rid} needs "
-                        f"{self.dec._page_need(h.entry)} pages, pool has "
-                        f"{self.dec.alloc.n_pages - 1} usable")
-                if len(self.router):
+                    msg = (f"decode page pool too small: request "
+                           f"{h.entry.req.rid} needs "
+                           f"{self.dec._page_need(h.entry)} pages, pool "
+                           f"has {self.dec.alloc.n_pages - 1} usable")
+                    if on_incomplete == "warn":
+                        # structured failure: drop the handoff, free its
+                        # prefill-side pages, keep serving the rest
+                        self.router.handoff.popleft()
+                        self.pre.alloc.free(p for p in h.pages if p >= 0)
+                        self.pre.stats["pages_in_use"] = \
+                            self.pre.alloc.in_use
+                        self.pre._fail_entry(h.entry, "oversized")
+                        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+                        continue
+                    raise kvs.OutOfPages(msg)
+                if len(self.router) or self.dec.sched.queue:
                     self._incomplete(on_incomplete, blocked=True,
                                      pending=pending)
                     break
@@ -322,6 +362,15 @@ class DisaggSession:
                               key=lambda r: r.rid)
         return self.results
 
+    @property
+    def failed(self) -> List[rsl.RequestFailed]:
+        """Structured failed-request results from both roles, rid order."""
+        return sorted(self.pre.failed + self.dec.failed,
+                      key=lambda f: f.rid)
+
+    def resil_summary(self) -> Optional[dict]:
+        return None if self.resil is None else self.resil.summary()
+
     def role_stats(self) -> dict:
         """Per-role counters in the shape sched.metrics.summarize folds
         into the ``"roles"`` record."""
@@ -332,18 +381,193 @@ class DisaggSession:
                 "_ticks": self.ticks}
 
     # --------------------------------------------------------- internals
+    def _on_handoff(self, h: Handoff) -> None:
+        """Router enqueue seam: the fault plan may drop the handoff
+        (redelivered ``redeliver_after`` ticks later, bounded by the
+        preset's ``max_drops``) or delay its visibility.  The full
+        delivery schedule is resolved here, once — replay-deterministic
+        and immune to how often admission polls the queue."""
+        plan = self.resil.plan if self.resil is not None else None
+        if plan is not None:
+            rid = h.entry.req.rid
+            while plan.drop_handoff(rid, h.drops):
+                h.drops += 1
+                h.ready_tick = h.tick + h.drops * plan.redeliver_after
+            delay = plan.handoff_delay(rid)
+            if delay:
+                h.ready_tick = max(h.ready_tick, h.tick + delay)
+        self.router.push_handoff(h)
+
+    def _step_role(self, sess: Session, name: str) -> bool:
+        """Advance one role for one tick; injected faults burn the tick
+        (and feed the wedge detector), a spike-throttled pool waits the
+        window out.  Returns whether the step actually ran."""
+        try:
+            sess._advance()
+            self._role_fail[name] = 0
+            return True
+        except rsl.InjectedFault:
+            self._role_faulted(name)
+            return False
+        except kvs.OutOfPages:
+            if sess.alloc is not None and sess.alloc.holdback > 0:
+                self.resil.count("wait_ticks")
+                return False
+            raise
+
+    def _fault_waiting(self) -> bool:
+        """Idle because of an injected condition that time will clear."""
+        if self.pre.alloc.holdback > 0 or self.dec.alloc.holdback > 0:
+            return True
+        # >= not >: self.ticks was already incremented for this (idle)
+        # tick, and the next iteration's _admit_handoffs compares against
+        # the same value — a handoff that just became ready is one loop
+        # away from landing, not wedged
+        return any(h.ready_tick >= self.ticks for h in self.router.handoff)
+
+    def _role_faulted(self, name: str) -> None:
+        self.resil.count("fault_steps")
+        self._role_fail[name] += 1
+        r = self.resil
+        if r.watchdog is None or self._role_fail[name] < r.cfg.wedge_ticks:
+            return
+        self._drain_role(name)
+        self._role_fail[name] = 0
+
+    def _drain_role(self, name: str) -> None:
+        """Wedged-role recovery: evict every active slot back through the
+        retry path (recompute via prefill — greedy decode makes the
+        resumed stream token-identical), bounded by ``max_retries``."""
+        sess = self.pre if name == "prefill" else self.dec
+        r = self.resil
+        r.count("watchdog_recoveries")
+        for i in reversed(range(sess.slots)):  # appendleft keeps order
+            e = sess.slot_entry[i]
+            if e is None:
+                continue
+            e.out = list(sess.slot_out[i])
+            sess._release_slot_pages(i)
+            sess.slot_entry[i] = None
+            sess.slot_pending[i] = []
+            sess.slot_out[i] = []
+            e.retries += 1
+            if e.record is not None:
+                e.record["retries"] = e.retries
+            if e.retries > r.cfg.max_retries:
+                sess._fail_entry(e, "retries_exhausted")
+                continue
+            r.count("retries")
+            self.router.queue.appendleft(e)
+
+    def _resil_tick(self) -> None:
+        """Orchestrator-side per-tick policy: role pool holdbacks,
+        deadline expiry everywhere a request can wait (router queue,
+        handoff queue, both roles' slots, the fallback queue), load
+        shedding against the decode pool, the degradation ladder,
+        handoff-timeout fallback, and the watchdog audit."""
+        r, t = self.resil, self.ticks
+        if r.plan is not None:
+            self.pre.alloc.holdback = r.plan.page_holdback(
+                self.pre.alloc.n_pages - 1, t, role="prefill")
+            self.dec.alloc.holdback = r.plan.page_holdback(
+                self.dec.alloc.n_pages - 1, t, role="decode")
+        self.pre._expire_queue_deadlines(t)    # router queue
+        self.dec._expire_queue_deadlines(t)    # fallback queue
+        self._expire_handoff_deadlines(t)
+        self.pre._expire_slot_deadlines(t)
+        self.dec._expire_slot_deadlines(t)
+        if r.cfg.shed_watermark is not None:
+            self._shed_load(t)
+        if r.degrade is not None:
+            usable = max(1, self.dec.alloc.n_pages - 1)
+            if r.degrade.update(self.dec.alloc.available / usable) >= 1 \
+                    and self.pre.prefix is not None:
+                self.pre.prefix.release(self.pre.alloc, 1)
+        if r.cfg.handoff_timeout is not None:
+            self._handoff_timeouts(t)
+        if r.watchdog is not None and r.watchdog.due(t):
+            r.count("watchdog_audits")
+            extra: dict = {}
+            for h in self.router.handoff:
+                for p in h.pages:
+                    if p >= 0:
+                        extra[p] = extra.get(p, 0) + 1
+            r.watchdog.audit(self.pre, extra_refs=extra)
+            r.watchdog.audit(self.dec)
+
+    def _expire_handoff_deadlines(self, t: int) -> None:
+        q = self.router.handoff
+        keep: Deque[Handoff] = collections.deque()
+        while q:
+            h = q.popleft()
+            e = h.entry
+            if e.deadline_tick is not None and t > e.deadline_tick:
+                self.pre.alloc.free(p for p in h.pages if p >= 0)
+                self.pre.stats["pages_in_use"] = self.pre.alloc.in_use
+                self.resil.count("deadline_miss")
+                self.pre._fail_entry(e, "deadline")
+            else:
+                keep.append(h)
+        q.extend(keep)
+
+    def _shed_load(self, t: int) -> None:
+        """Shed never-admitted queued prompts, youngest first, while the
+        decode-pool demand (queued + in-flight handoffs, worst case)
+        exceeds the watermark fraction of the decode pool."""
+        r = self.resil
+        limit = r.cfg.shed_watermark * max(1, self.dec.alloc.n_pages - 1)
+        total = sum(self.dec._page_need(h.entry)
+                    for h in self.router.handoff)
+        total += sum(self.dec._page_need(e) for e in self.router.queue)
+        while total > limit:
+            e = self.router.shed_youngest()
+            if e is None:
+                break
+            total -= self.dec._page_need(e)
+            r.count("shed")
+            self.pre._fail_entry(e, "shed")
+
+    def _handoff_timeouts(self, t: int) -> None:
+        """Graceful degradation: a handoff stuck past ``handoff_timeout``
+        falls back to co-located prefill on the decode role — its
+        prefill-side pages are freed and the entry re-enters through the
+        decode session's own scheduler (recompute, reservation-checked
+        admission, so decode still never preempts)."""
+        timeout = self.resil.cfg.handoff_timeout
+        q = self.router.handoff
+        keep: Deque[Handoff] = collections.deque()
+        while q:
+            h = q.popleft()
+            if t - h.tick > timeout:
+                self.pre.alloc.free(p for p in h.pages if p >= 0)
+                self.pre.stats["pages_in_use"] = self.pre.alloc.in_use
+                e = h.entry
+                if e.record is not None:
+                    e.record["degraded"] = "colocated-prefill"
+                self.resil.count("handoff_fallbacks")
+                self.dec.sched.queue.append(e)
+            else:
+                keep.append(h)
+        q.extend(keep)
+
     def _admit_handoffs(self) -> None:
-        """Land queued handoffs FIFO into free decode slots; the head
-        blocks (order stays deterministic).  Prefill-side page refs are
-        released only after the migration lands — a handoff in flight
-        can always be replayed."""
-        while self.router.handoff:
-            h = self.router.handoff[0]
-            slot = next((i for i, e in enumerate(self.dec.slot_entry)
+        """Land queued handoffs FIFO into free decode slots; the first
+        *ready* head that does not fit blocks (order stays
+        deterministic), fault-delayed entries are looked past.  Prefill-
+        side page refs are released only after the migration lands — a
+        handoff in flight can always be replayed."""
+        q = self.router.handoff
+        i = 0
+        while i < len(q):
+            h = q[i]
+            if h.ready_tick > self.ticks:
+                i += 1                 # dropped/delayed: not visible yet
+                continue
+            slot = next((s for s, e in enumerate(self.dec.slot_entry)
                          if e is None), None)
             if slot is None or not self.dec.fits_handoff(h):
                 break
-            self.router.handoff.popleft()
+            del q[i]
             self.dec.admit_handoff(slot, h, self.pre.state,
                                    tick=self.ticks)
             self.pre.alloc.free(p for p in h.pages if p >= 0)
@@ -351,12 +575,17 @@ class DisaggSession:
 
     def _incomplete(self, on_incomplete: str, blocked: bool,
                     pending: Sequence[Tuple[int, Request]] = ()) -> None:
-        unfinished = [e.req.rid for e in self.pre.slot_entry
-                      if e is not None]
-        unfinished += [e.req.rid for e in self.dec.slot_entry
-                       if e is not None]
-        unfinished += [e.req.rid for e in self.router.queue]
-        unfinished += [h.entry.req.rid for h in self.router.handoff]
+        live = [e for e in self.pre.slot_entry if e is not None]
+        live += [e for e in self.dec.slot_entry if e is not None]
+        live += list(self.router.queue)
+        live += list(self.dec.sched.queue)
+        live += [h.entry for h in self.router.handoff]
+        for e in live:
+            if e.record is not None and e.record.get("state") == "queued":
+                e.record["state"] = "unserved"
+        for _, req in pending:
+            self.records.append(_unserved_record(req))
+        unfinished = [e.req.rid for e in live]
         unfinished += [req.rid for _, req in pending]
         if not unfinished or on_incomplete == "ignore":
             return

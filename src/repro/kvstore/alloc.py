@@ -34,6 +34,10 @@ class PageAllocator:
         self._ref: Dict[int, int] = {}
         self.peak = 0
         self.total_allocs = 0
+        # fault-injection seam (repro.resil page-spike): pages temporarily
+        # treated as unavailable.  Affects available/alloc/alloc_many only
+        # — pages already granted are never clawed back.
+        self.holdback = 0
 
     # ------------------------------------------------------------- queries
     @property
@@ -43,18 +47,19 @@ class PageAllocator:
 
     @property
     def available(self) -> int:
-        return len(self._free)
+        return max(0, len(self._free) - self.holdback)
 
     def refcount(self, pid: int) -> int:
         return self._ref.get(pid, 0)
 
     # --------------------------------------------------------------- ops
     def alloc(self) -> int:
-        if not self._free:
+        if self.available <= 0:
+            held = f", {self.holdback} held back" if self.holdback else ""
             raise OutOfPages(
                 f"page pool exhausted ({self.n_pages} pages, "
-                f"{self.in_use} in use) — grow kv_pool_pages or finish "
-                "requests faster")
+                f"{self.in_use} in use{held}) — grow kv_pool_pages or "
+                "finish requests faster")
         pid = self._free.pop()
         self._used.add(pid)
         self._ref[pid] = 1
@@ -69,10 +74,11 @@ class PageAllocator:
         decode pool."""
         if n < 0:
             raise ValueError(f"alloc_many wants n >= 0, got {n}")
-        if len(self._free) < n:
+        if self.available < n:
+            held = f", {self.holdback} held back" if self.holdback else ""
             raise OutOfPages(
                 f"page pool exhausted ({self.n_pages} pages, "
-                f"{self.in_use} in use, {n} requested) — grow "
+                f"{self.in_use} in use{held}, {n} requested) — grow "
                 "kv_pool_pages or finish requests faster")
         return [self.alloc() for _ in range(n)]
 

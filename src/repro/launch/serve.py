@@ -73,9 +73,10 @@ if __name__ == "__main__":
             os.environ["XLA_FLAGS"] = \
                 f"--xla_force_host_platform_device_count={_n_role}"
 
-from repro.api import CompressionSpec, Engine
+from repro.api import CompressionSpec, Engine, FaultPlan
 from repro.configs import get, reduced
 from repro.launch.mesh import make_host_mesh
+from repro.resil import PRESETS as RESIL_PRESETS
 from repro.sched import SchedConfig, WorkloadSpec, generate, summarize
 from repro.sched.workload import PRESETS
 
@@ -130,7 +131,38 @@ def main():
     ap.add_argument("--decode-devices", type=int, default=None,
                     help="devices for the decode role's mesh (with "
                          "--disagg; requires --prefill-devices)")
+    ap.add_argument("--fault-plan", default=None, metavar="PRESET:SEED",
+                    help="inject deterministic faults (repro.resil): "
+                         "one of " + ", ".join(
+                             sorted(k for k in RESIL_PRESETS if k != "none"))
+                         + "; e.g. drop-handoff:3")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="per-request completion budget in scheduler "
+                         "ticks; missed deadlines become structured "
+                         "RequestFailed results, not hangs")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="recompute re-admissions allowed per request "
+                         "before it fails with 'retries_exhausted' "
+                         "(default 2 when the resil layer is on)")
     args = ap.parse_args()
+
+    resil = None
+    if (args.fault_plan is not None or args.deadline_ticks is not None
+            or args.max_retries is not None):
+        if args.deadline_ticks is not None and args.deadline_ticks < 1:
+            ap.error("--deadline-ticks must be >= 1")
+        if args.max_retries is not None and args.max_retries < 0:
+            ap.error("--max-retries must be >= 0")
+        resil = {"watchdog_every": 8}
+        if args.fault_plan is not None:
+            try:
+                resil["fault_plan"] = FaultPlan.parse(args.fault_plan)
+            except ValueError as e:
+                ap.error(str(e))
+        if args.deadline_ticks is not None:
+            resil["deadline_ticks"] = args.deadline_ticks
+        if args.max_retries is not None:
+            resil["max_retries"] = args.max_retries
 
     if (args.prefill_devices is not None) != (args.decode_devices is not None):
         ap.error("--prefill-devices and --decode-devices go together")
@@ -183,23 +215,44 @@ def main():
                        scheduler=SchedConfig(
                            policy=args.policy, chunk=args.chunk,
                            prefix_cache=args.prefix_cache),
-                       mesh=mesh, disagg=disagg)
+                       mesh=mesh, disagg=disagg, resil=resil)
     pre = sess.pre if args.disagg else sess
     print(f"[serve] workload={args.workload} seed={args.seed} "
           f"kv={pre.kv_cache} chunk={pre.chunk} policy={args.policy}"
           + (" disagg" if args.disagg else ""))
+    if resil is not None:
+        print(f"[serve] resil: fault_plan="
+              f"{args.fault_plan or 'none'} "
+              f"deadline_ticks={args.deadline_ticks} "
+              f"max_retries={resil.get('max_retries', 2)}")
     t0 = time.perf_counter()
-    results = sess.run_workload(arrivals)
+    # injected faults / deadlines make partial completion an expected
+    # outcome — report it instead of raising
+    results = sess.run_workload(
+        arrivals, on_incomplete="warn" if resil is not None else "raise")
     dt = time.perf_counter() - t0
+    rsumm = sess.resil_summary() if resil is not None else None
     if args.disagg:
         steps = sess.pre.stats["steps"] + sess.dec.stats["steps"]
-        m = summarize(sess.records, dt, steps, roles=sess.role_stats())
+        m = summarize(sess.records, dt, steps, roles=sess.role_stats(),
+                      resil=rsumm)
     else:
-        m = summarize(sess.records, dt, sess.stats["steps"])
+        m = summarize(sess.records, dt, sess.stats["steps"], resil=rsumm)
     print(f"[serve] {m['completed']}/{m['requests']} requests, "
           f"{m['tokens']} tokens, {m['tok_per_s']:.1f} tok/s, "
           f"goodput {m['goodput_req_per_s']:.2f} req/s "
           f"({m['steps']} model calls)")
+    if rsumm is not None:
+        n_failed = len(sess.failed)
+        line = (f"[serve] resil: shed {rsumm['shed']}, retries "
+                f"{rsumm['retries']}, deadline misses "
+                f"{rsumm['deadline_miss']}, failed {n_failed}")
+        if rsumm.get("faults"):
+            line += ", injected " + ", ".join(
+                f"{k}={v}" for k, v in sorted(rsumm["faults"].items()))
+        print(line)
+        for f in sess.failed:
+            print(f"[serve]   {f!r}")
     if m["ttft_s"]:
         print(f"[serve] TTFT p50 {m['ttft_s']['p50']*1e3:.0f} ms / "
               f"p99 {m['ttft_s']['p99']*1e3:.0f} ms; "

@@ -72,8 +72,30 @@ def _handoff(records: Sequence[Dict]) -> Optional[dict]:
     }
 
 
+def _outcomes(records: Sequence[Dict]) -> Optional[dict]:
+    """Terminal-state census (absent when no record carries a state —
+    pre-resil callers).  ``failed_by_reason`` attributes every
+    structured failure (deadline / shed / retries_exhausted /
+    oversized) so denominators stay honest under faults."""
+    states = [r.get("state") for r in records if r.get("state")]
+    if not states:
+        return None
+    out: Dict[str, int] = {}
+    for s in states:
+        out[s] = out.get(s, 0) + 1
+    reasons: Dict[str, int] = {}
+    for r in records:
+        if r.get("state") == "failed" and r.get("failed_reason"):
+            why = r["failed_reason"]
+            reasons[why] = reasons.get(why, 0) + 1
+    if reasons:
+        out["failed_by_reason"] = reasons
+    return out
+
+
 def summarize(records: Sequence[Dict], span_seconds: float,
-              steps: int, roles: Optional[Dict[str, Dict]] = None) -> dict:
+              steps: int, roles: Optional[Dict[str, Dict]] = None,
+              resil: Optional[Dict] = None) -> dict:
     """Fold per-request lifecycle records into the serving summary.
 
     records: dicts with prompt_len, max_new, n_generated, submit_time,
@@ -84,6 +106,10 @@ def summarize(records: Sequence[Dict], span_seconds: float,
     ``{"prefill": {"steps": n, "busy_ticks": b}, "decode": {...}}`` plus
     a ``"ticks"`` total under the key ``"_ticks"``; folded into a
     ``"roles"`` record with per-role utilization.
+
+    resil: optional resilience-layer counters (``Session.resil_summary``)
+    — shed/retry/deadline-miss/degraded plus per-fault-class injection
+    counts; folded through as a ``"resil"`` record.
     """
     done = [r for r in records if r.get("finish_time") is not None]
     ttft = [r["first_token_time"] - r["submit_time"] for r in records
@@ -123,6 +149,11 @@ def summarize(records: Sequence[Dict], span_seconds: float,
         "prefix_pages_reused": sum(r.get("prefix_pages", 0)
                                    for r in records),
     }
+    outcomes = _outcomes(records)
+    if outcomes is not None:
+        out["outcomes"] = outcomes
+    if resil is not None:
+        out["resil"] = dict(resil)
     hand = _handoff(records)
     if hand is not None:
         out["handoff"] = hand

@@ -91,6 +91,9 @@ class SchedEntry:
     prefix_pages: int = 0         # pages attached from the prefix cache
     record: Optional[dict] = None  # lifecycle metrics (api.Session owns)
     hashes: Optional[list] = None  # prompt page hashes, computed once
+    # repro.resil lifecycle state (None/0 when the layer is off):
+    deadline_tick: Optional[int] = None  # absolute tick it must finish by
+    retries: int = 0              # re-admissions after faults/recovery
 
 
 class Scheduler:
@@ -165,6 +168,38 @@ class Scheduler:
             if self.cfg.policy == "fifo" or aged:
                 return None        # head-of-line blocks
         return None
+
+    # ----------------------------------------------- resil queue surgery
+    def pop_expired(self, tick: int) -> List[SchedEntry]:
+        """Remove and return queued entries whose deadline has passed
+        (``tick > deadline_tick``).  Queue order is preserved for the
+        survivors; the Session turns the expired ones into structured
+        RequestFailed results."""
+        expired = [e for e in self.queue
+                   if e.deadline_tick is not None and tick > e.deadline_tick]
+        if expired:
+            gone = set(id(e) for e in expired)
+            self.queue = collections.deque(
+                e for e in self.queue if id(e) not in gone)
+        return expired
+
+    def shed_youngest(self) -> Optional[SchedEntry]:
+        """Remove and return the lowest-priority queued entry for load
+        shedding: the most recently submitted one that has never been
+        admitted (preempted entries sit at the front with work already
+        invested — shedding them would waste it).  None if every queued
+        entry has run before."""
+        best = None
+        for i in range(len(self.queue) - 1, -1, -1):
+            e = self.queue[i]
+            if e.seq == -1 and not e.out:
+                best = i
+                break
+        if best is None:
+            return None
+        e = self.queue[best]
+        del self.queue[best]
+        return e
 
     # ------------------------------------------------------- preemption
     @staticmethod

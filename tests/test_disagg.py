@@ -139,6 +139,42 @@ def test_randomized_handoff_orderings(params, seed):
     drained(d)
 
 
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_churn_handoff_retry_faults_no_leaks(params, seed):
+    """Satellite churn sweep: interleave admission, handoff drops/
+    delays/timeouts, role faults, and retry across seeded traffic with
+    tight pools and backlog bounds.  Whatever completes must carry
+    oracle tokens, the failed census must account for the rest, and
+    both pools must drain with exact refcounts (zero leaks)."""
+    from repro import resil as rsl
+    rng = np.random.default_rng(seed)
+    wl = schd.WorkloadSpec.preset(
+        "burst" if seed % 2 else "heterogeneous", n_requests=8,
+        vocab=CFG.vocab, seed=seed, prompt_len=(3, 12), max_new=(1, 6))
+    arrivals = schd.generate(wl)
+    base = serial_baseline(CFG, params, [r for _, r in arrivals])
+    oracle = {r.rid: t for (_, r), t in
+              zip(sorted(arrivals, key=lambda a: a[1].rid), base)}
+    preset = ["drop-handoff", "role-stall", "straggler"][seed % 3]
+    d = DisaggSession(
+        CFG, params,
+        disagg=DisaggConfig(prefill_slots=int(rng.integers(1, 3)),
+                            decode_slots=int(rng.integers(2, 4)),
+                            decode_pool_pages=40,
+                            max_backlog=int(rng.integers(1, 4))),
+        max_len=ML, page_size=PS,
+        scheduler={"chunk": int(rng.integers(1, 5))},
+        resil={"fault_plan": f"{preset}:{seed}", "max_retries": 2,
+               "watchdog_every": 3,
+               "handoff_timeout": int(rng.integers(4, 9))})
+    got = d.run_workload(arrivals, on_incomplete="warn")
+    assert all(oracle[r.rid] == r.tokens for r in got)
+    assert len(got) + len(d.failed) == 8          # full census
+    drained(d)
+    assert rsl.audit_session(d.pre) == []
+    assert rsl.audit_session(d.dec) == []
+
+
 # ---------------------------------------------------------- int8 moves
 def test_int8_migration_token_parity(params):
     reqs = mk_reqs(n=4, seed=2)

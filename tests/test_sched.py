@@ -386,6 +386,34 @@ def test_metrics_zero_span_reports_none():
     assert m2["roles"]["prefill"]["utilization"] is None
 
 
+# ------------------------------------------------------------ resil churn
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_churn_preemption_faults_no_leaks(params, seed):
+    """Interleave admission, page-pressure preemption, and injected
+    page-spike faults on one pool: every request still completes with
+    oracle tokens, the allocator drains to zero with exact refcounts,
+    and the audit finds nothing — the leak-freedom contract under churn."""
+    from repro import resil as rsl
+    rng = np.random.default_rng(seed)
+    wl = schd.WorkloadSpec(n_requests=8, prompt_len=(3, 12),
+                           max_new=(1, 8), arrival="poisson",
+                           vocab=CFG.vocab, seed=seed)
+    arrivals = schd.generate(wl)
+    base = serial_baseline(params, [r for _, r in arrivals])
+    need = page_need(12, 8, ML, PS)
+    sess = Session(CFG, params, batch_slots=3, max_len=ML, page_size=PS,
+                   kv_pool_pages=1 + 2 * need,   # below 3x worst case
+                   scheduler={"chunk": int(rng.integers(1, 6))},
+                   resil={"fault_plan": f"page-spike:{seed}",
+                          "watchdog_every": 3, "max_retries": 2})
+    got = sess.run_workload(arrivals)
+    assert [r.tokens for r in got] == base
+    assert not sess.failed
+    assert sess.alloc.in_use == 0
+    alloc_invariant(sess.alloc)
+    assert rsl.audit_session(sess) == []
+
+
 # ------------------------------------------------------- hypothesis sweep
 try:
     from hypothesis import given, settings, strategies as st
@@ -420,3 +448,31 @@ if HAVE_HYP:
         assert [r.tokens for r in got] == base
         assert sess.alloc.in_use == 0
         alloc_invariant(sess.alloc)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 9999),
+           preset=st.sampled_from(["page-spike", "straggler",
+                                   "role-stall"]),
+           chunk=st.sampled_from([2, 4, 8]))
+    def test_prop_churn_faults_drain_clean(hyp_params, seed, preset,
+                                           chunk):
+        """Any fault preset x seed x chunk over a pressured pool:
+        completes with oracle tokens, drains with zero leaks and exact
+        refcounts."""
+        from repro import resil as rsl
+        spec = schd.WorkloadSpec(n_requests=6, prompt_len=(2, 12),
+                                 max_new=(1, 8), arrival="poisson",
+                                 vocab=CFG.vocab, seed=seed)
+        arrivals = schd.generate(spec)
+        base = serial_baseline(hyp_params, [r for _, r in arrivals])
+        need = page_need(12, 8, ML, PS)
+        sess = Session(CFG, hyp_params, batch_slots=3, max_len=ML,
+                       page_size=PS, kv_pool_pages=1 + 2 * need,
+                       scheduler={"chunk": chunk},
+                       resil={"fault_plan": f"{preset}:{seed}",
+                              "watchdog_every": 4, "max_retries": 2})
+        got = sess.run_workload(arrivals)
+        assert [r.tokens for r in got] == base
+        assert sess.alloc.in_use == 0
+        alloc_invariant(sess.alloc)
+        assert rsl.audit_session(sess) == []
