@@ -75,6 +75,16 @@ def _rel(run: dict, mode: str):
     return tok / dense
 
 
+def _provenance_line(run: dict, label: str) -> str:
+    p = run.get("provenance")
+    if not p:
+        return f"  {label}: no provenance recorded"
+    fields = ("config", "mode", "seed", "backend", "jax", "git_sha",
+              "timestamp")
+    return f"  {label}: " + " ".join(
+        f"{k}={p[k]}" for k in fields if p.get(k) is not None)
+
+
 def check(new: dict, base: dict, tol: float, log=print) -> bool:
     ok = True
     for mode in GATED_MODES:
@@ -361,6 +371,11 @@ def main() -> int:
         base = json.load(f)
     print(f"perf gate (tol {args.tol:.0%}) — {args.new} vs {args.baseline}")
     ok = check(new, base, args.tol)
+    if not ok:
+        # name the exact setups being compared so a failing gate is
+        # diagnosable from the CI log alone
+        print(_provenance_line(new, "new run "))
+        print(_provenance_line(base, "baseline"))
     print("PASS" if ok else "FAIL")
     return 0 if ok else 1
 

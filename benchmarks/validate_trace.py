@@ -1,0 +1,121 @@
+"""Trace smoke gate: validate a repro.obs Chrome/Perfetto trace export.
+
+  python benchmarks/validate_trace.py TRACE.json [TRACE2.json]
+
+Checks (all deterministic — this is a CI gate, not a heuristic):
+
+* the file is Chrome ``trace_event`` JSON object format
+  (``{"traceEvents": [...]}``) that https://ui.perfetto.dev loads;
+* every event row is schema-complete for its phase: ``X`` (complete)
+  rows carry ``ts``/``dur``, ``i`` (instant) rows carry scope ``s``,
+  ``M`` (metadata) rows name a process or thread;
+* pids/tids are consistent: every event's pid has a ``process_name``
+  metadata row, every nonzero tid a ``thread_name`` row;
+* timestamps are tick-derived (non-negative multiples of the tracer's
+  TICK_US) and every event row echoes its tick in ``args`` — the
+  property that makes same-seed replays byte-comparable;
+* the serving stack actually traced: at least one step span and one
+  request-lifecycle event, and every event name is a known seam
+  (``repro.obs.trace.EVENT_NAMES``).
+
+With a second path, additionally require the two files byte-identical
+(the same-seed replay gate — run both serves with REPRO_AUTOTUNE=0 so
+per-process autotune timing cannot pick different kernels).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.obs.trace import EVENT_NAMES, TICK_US  # noqa: E402
+
+KNOWN = set(EVENT_NAMES)
+
+
+def validate(path: str, log=print) -> bool:
+    with open(path) as f:
+        doc = json.load(f)
+    errs = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        log(f"  {path}: not object-format trace_event JSON")
+        return False
+    evs = doc["traceEvents"]
+    procs, threads = set(), set()
+    names = set()
+    n_spans = n_instants = 0
+    for i, ev in enumerate(evs):
+        ph = ev.get("ph")
+        if ph == "M":
+            if ev.get("name") == "process_name":
+                procs.add(ev.get("pid"))
+            elif ev.get("name") == "thread_name":
+                threads.add((ev.get("pid"), ev.get("tid")))
+            else:
+                errs.append(f"event {i}: unknown metadata {ev.get('name')}")
+            continue
+        if ph not in ("X", "i"):
+            errs.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        for field in ("name", "pid", "tid", "ts", "args"):
+            if field not in ev:
+                errs.append(f"event {i} ({ev.get('name')}): missing "
+                            f"{field}")
+        if ev.get("name") not in KNOWN:
+            errs.append(f"event {i}: unknown seam {ev.get('name')!r}")
+        names.add(ev.get("name"))
+        ts = ev.get("ts", -1)
+        if ts < 0 or ts % TICK_US != 0:
+            errs.append(f"event {i} ({ev.get('name')}): ts {ts} is not a "
+                        f"non-negative multiple of TICK_US={TICK_US}")
+        if ev.get("args", {}).get("tick") != ts // TICK_US:
+            errs.append(f"event {i} ({ev.get('name')}): args.tick "
+                        f"{ev.get('args', {}).get('tick')} != ts/TICK_US")
+        if ph == "X":
+            n_spans += 1
+            if ev.get("dur", 0) <= 0:
+                errs.append(f"event {i}: span without positive dur")
+        else:
+            n_instants += 1
+            if ev.get("s") != "t":
+                errs.append(f"event {i}: instant without thread scope")
+        if ev.get("pid") not in procs:
+            errs.append(f"event {i}: pid {ev.get('pid')} has no "
+                        "process_name metadata")
+        if ev.get("tid") and (ev.get("pid"), ev.get("tid")) not in threads:
+            errs.append(f"event {i}: tid {ev.get('tid')} has no "
+                        "thread_name metadata")
+    if n_spans == 0:
+        errs.append("no step spans — the serving loop did not trace")
+    if not names & {"req.submit", "req.first_token", "req.finish"}:
+        errs.append("no request-lifecycle events")
+    for e in errs[:20]:
+        log(f"  {path}: {e}")
+    if not errs:
+        log(f"  {path}: {len(evs)} events ({n_spans} spans, "
+            f"{n_instants} instants, {len(procs)} roles, "
+            f"{sorted(names)}) OK")
+    return not errs
+
+
+def main() -> int:
+    if len(sys.argv) not in (2, 3):
+        print(__doc__)
+        return 2
+    ok = validate(sys.argv[1])
+    if len(sys.argv) == 3:
+        ok &= validate(sys.argv[2])
+        with open(sys.argv[1], "rb") as a, open(sys.argv[2], "rb") as b:
+            if a.read() != b.read():
+                print(f"  REPLAY DIVERGED: {sys.argv[1]} != {sys.argv[2]} "
+                      "(same-seed traces must be byte-identical)")
+                ok = False
+            else:
+                print("  replay byte-identical OK")
+    print("PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -136,7 +136,8 @@ class Engine:
                 page_size: int = 16,
                 kv_pool_pages: Optional[int] = None,
                 kv_dtype: Optional[str] = None,
-                scheduler=None, mesh=None, disagg=None, resil=None):
+                scheduler=None, mesh=None, disagg=None, resil=None,
+                obs=None):
         """A continuous-batching serving session on the active backend.
 
         ``scheduler``: a sched.SchedConfig (or dict / policy name) —
@@ -176,6 +177,12 @@ class Engine:
         ladder across session generations: when sustained page pressure
         has pushed it to L2, this session's KV pool is demoted to int8.
         ``resil=None`` (default) is the exact pre-resil serving path.
+
+        ``obs``: a `repro.obs.Tracer` — structured event tracing across
+        every serving seam (admission, preemption, prefill/decode steps,
+        handoffs, allocator, prefix cache, fault injections), exportable
+        as a Chrome/Perfetto timeline.  ``obs=None`` (default) traces
+        nothing at zero cost.
         """
         if self.cfg is None:
             raise ValueError("serving needs an ArchConfig")
@@ -219,7 +226,8 @@ class Engine:
                 self.cfg, self.params, disagg=d, max_len=max_len,
                 seed=seed, backend=backend, page_size=page_size,
                 kv_dtype=kv_dtype, scheduler=scheduler,
-                prefill_plan=pre_plan, decode_plan=dec_plan, resil=resil)
+                prefill_plan=pre_plan, decode_plan=dec_plan, resil=resil,
+                obs=obs)
         plan = None
         if mesh is not None:
             from repro import shard as shardmod
@@ -230,13 +238,15 @@ class Engine:
                        max_len=max_len, seed=seed, backend=backend,
                        kv_cache=kv_cache, page_size=page_size,
                        kv_pool_pages=kv_pool_pages, kv_dtype=kv_dtype,
-                       scheduler=scheduler, plan=plan, resil=resil)
+                       scheduler=scheduler, plan=plan, resil=resil,
+                       obs=obs)
 
     def serve(self, requests: Sequence[Union[Request, List[int]]],
               *, batch_slots: int = 4, max_len: int = 256,
               max_steps: int = 10_000, seed: int = 0,
               kv_cache: Optional[str] = None,
-              scheduler=None, disagg=None, resil=None) -> List[Result]:
+              scheduler=None, disagg=None, resil=None,
+              obs=None) -> List[Result]:
         """Serve a batch of requests to completion (continuous batching).
         Results come back in deterministic rid order.  ``disagg`` routes
         through a disaggregated prefill/decode session pair — greedy
@@ -245,7 +255,7 @@ class Engine:
         sess = self.session(batch_slots=batch_slots, max_len=max_len,
                             seed=seed, kv_cache=kv_cache,
                             scheduler=scheduler, disagg=disagg,
-                            resil=resil)
+                            resil=resil, obs=obs)
         for rid, req in enumerate(requests):
             if not isinstance(req, Request):
                 req = Request(prompt=list(req), rid=rid)
@@ -348,26 +358,19 @@ class Engine:
         term (every compressed projection at this batch width).  Shares
         are from best-of timings of the jitted pieces — the honest signal
         behind 'attention is now the dominant share' (ROADMAP)."""
+        import functools
+
         import jax
         from repro import kvstore as kvs
         from repro.core import sparse_fc as sfc
         from repro.kernels import tune
         from repro.models import attention as attn
         from repro.models import kvcache as kvc
+        from repro.obs import timeit as _timeit
         import jax.numpy as jnp
         cfg = self.cfg
         rng = np.random.default_rng(0)
-
-        def timeit(fn, *args):
-            jax.block_until_ready(fn(*args))
-            best = float("inf")
-            for _ in range(5):
-                t0 = time.perf_counter()
-                for _ in range(3):
-                    o = fn(*args)
-                jax.block_until_ready(o)
-                best = min(best, (time.perf_counter() - t0) / 3)
-            return best
+        timeit = functools.partial(_timeit, reps=5, inner=3)
 
         hkv, h, dh = cfg.n_kv, cfg.n_heads, cfg.head_dim
         scale = dh ** -0.5
@@ -715,7 +718,15 @@ class Engine:
         backends on one FC instance; returns a JSON-ready dict
         (benchmarks/run.py writes it to BENCH_api.json)."""
         from repro.kernels import tune
-        out = {"backends": {}, "modes": {}}
+        from repro.obs import provenance
+        out = {
+            # run provenance rides at the top of every BENCH_api.json so
+            # a regression report names the exact setup that produced it
+            "provenance": provenance(
+                config=getattr(self.cfg, "name", None),
+                mode=",".join(modes), seed=self._seed,
+                backend=self.backend.name),
+            "backends": {}, "modes": {}}
         reqs = [Request(prompt=[1, 2 + i % 7, 3], max_new=max_new, rid=i)
                 for i in range(requests)]
         # entries already in the process-global cache were tuned by earlier

@@ -40,6 +40,7 @@ unchanged; ``plan=None`` is the exact pre-mesh single-device path.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 import warnings
@@ -50,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import kvstore as kvs
+from repro import obs as obs_mod
 from repro import resil as rsl
 from repro import sched as schd
 from repro.api import env
@@ -129,7 +131,7 @@ class Session:
                  kv_cache: Optional[str] = None, page_size: int = 16,
                  kv_pool_pages: Optional[int] = None,
                  kv_dtype: Optional[str] = None,
-                 scheduler=None, plan=None, resil=None):
+                 scheduler=None, plan=None, resil=None, obs=None):
         assert cfg.has_decode, "encoder archs don't serve autoregressively"
         from repro.models import model as M
         self.cfg, self.params = cfg, params
@@ -234,6 +236,38 @@ class Session:
             self.stats.update({"page_allocs": 0, "pages_in_use": 0,
                                "pages_peak": 0, "pages_reclaimed_swa": 0,
                                "prefix_hits": 0, "prefix_pages_reused": 0})
+        # observability: obs.NULL keeps every seam on the exact pre-obs
+        # path (hooks stay None, emits are no-ops); a live obs.Tracer
+        # wires the allocator / prefix / scheduler / resil seams so the
+        # tick-clock event stream covers the whole request lifecycle
+        self.tracer = obs if obs is not None else obs_mod.NULL
+        if self.tracer.enabled:
+            self._wire_obs()
+
+    def _wire_obs(self) -> None:
+        """Attach this session's tracer to the host-side seams.  The
+        hook reads ``self.role`` / ``self.tick`` at emit time, so disagg
+        roles renamed after construction stamp correctly."""
+        def hook(name, **args):
+            self.tracer.instant(name, tick=self.tick, role=self.role,
+                                **args)
+        if self.alloc is not None:
+            self.alloc.obs = hook
+        if self.prefix is not None:
+            self.prefix.obs = hook
+        self.sched.obs = hook
+        if self.resil is not None:
+            if self.resil.degrade is not None:
+                self.resil.degrade.obs = hook
+            if self.resil.watchdog is not None:
+                self.resil.watchdog.obs = hook
+
+    def _step_ctx(self, phase: str):
+        """Wall-clock phase accounting around the jitted step (tracing
+        on only); wall times never enter the tick-clock event stream."""
+        if not self.tracer.enabled:
+            return contextlib.nullcontext()
+        return self.tracer.wall.phase(phase)
 
     # ------------------------------------------------------------ public
     def submit(self, req: Request) -> None:
@@ -253,6 +287,9 @@ class Session:
         if self.resil is not None:
             entry.deadline_tick = self.resil.deadline_for(req, self.tick)
             rec["deadline_tick"] = entry.deadline_tick
+        self.tracer.instant("req.submit", tick=self.tick, role=self.role,
+                            rid=req.rid, prompt_len=len(req.prompt),
+                            max_new=req.max_new)
 
     def run(self, max_steps: int = 10_000,
             on_incomplete: str = "raise") -> List[Result]:
@@ -269,7 +306,21 @@ class Session:
                      on_incomplete: str = "raise") -> List[Result]:
         """Serve timed traffic: ``arrivals`` is [(arrival_step, Request)]
         (see sched.workload); requests already submit()ed count as
-        step-0 arrivals.  Idle gaps fast-forward the step clock."""
+        step-0 arrivals.  Idle gaps fast-forward the step clock.
+
+        A ``HealthError`` or ``OutOfPages`` escaping the loop dumps the
+        flight recorder (when one is attached) before re-raising, so
+        chaos-sweep crashes leave a post-mortem on disk."""
+        try:
+            return self._run_loop(arrivals, max_steps, on_incomplete)
+        except (rsl.HealthError, kvs.OutOfPages) as e:
+            self.tracer.crash(type(e).__name__, role=self.role,
+                              tick=self.tick, error=str(e))
+            raise
+
+    def _run_loop(self, arrivals: Sequence[Tuple[int, Request]],
+                  max_steps: int,
+                  on_incomplete: str) -> List[Result]:
         pending: Deque[Tuple[int, Request]] = collections.deque(
             sorted(arrivals, key=lambda a: a[0]))
         # the arrival clock mirrors the model-call count but can jump
@@ -301,10 +352,13 @@ class Session:
                 break
             try:
                 self._advance()
-            except rsl.InjectedFault:
+            except rsl.InjectedFault as f:
                 # deliberately injected step failure (role-stall /
                 # straggler): the tick is lost, the work is not
                 self.resil.count("fault_steps")
+                self.tracer.instant("fault.injected", tick=self.tick,
+                                    role=self.role,
+                                    fault=f.fault_class)
             except kvs.OutOfPages:
                 if self.resil is not None and self.alloc is not None \
                         and self.alloc.holdback > 0:
@@ -411,6 +465,8 @@ class Session:
                 break
             total -= self._page_need(e)
             r.count("shed")
+            self.tracer.instant("sched.shed", tick=self.tick,
+                                role=self.role, rid=e.req.rid)
             self._fail_entry(e, "shed")
 
     def _fail_entry(self, entry: schd.SchedEntry, reason: str) -> None:
@@ -427,6 +483,13 @@ class Session:
             retries=entry.retries))
         if self.resil is not None:
             self.resil.count("failed")
+        self.tracer.instant("resil.fail", tick=self.tick, role=self.role,
+                            rid=entry.req.rid, reason=reason,
+                            retries=entry.retries)
+        # flight-recorder post-mortem: the ticks leading up to the failure
+        self.tracer.crash(f"RequestFailed_{reason}",
+                          rid=entry.req.rid, why=reason,
+                          role=self.role, tick=self.tick)
 
     def _page_need(self, entry: schd.SchedEntry) -> int:
         req = entry.req
@@ -485,6 +548,9 @@ class Session:
             # session generation (pool dtype is fixed per live session)
             rec["degraded"] = True
             self.resil.count("degraded_admissions")
+        self.tracer.instant("sched.admit", tick=self.tick, role=self.role,
+                            slot=i, rid=req.rid,
+                            resumed=len(entry.out))
         self.slot_entry[i] = entry
         # recompute resume: a preempted request re-prefills its prompt
         # PLUS its generated-so-far tokens, then continues sampling
@@ -578,6 +644,9 @@ class Session:
         entry = self.slot_entry[i]
         entry.out = list(self.slot_out[i])
         entry.record["preemptions"] += 1
+        self.tracer.instant("sched.preempt", tick=self.tick,
+                            role=self.role, slot=i, rid=entry.req.rid,
+                            generated=len(entry.out))
         self._release_slot_pages(i)
         self.slot_entry[i] = None
         self.slot_pending[i] = []
@@ -736,9 +805,13 @@ class Session:
                 tokens[i] = self.slot_out[i][-1]
             else:
                 tokens[i] = entry.req.prompt[-1]
-        self.state, logits = self._step(self.params, self.state,
-                                        jnp.asarray(tokens))
+        with self._step_ctx("decode"):
+            self.state, logits = self._step(self.params, self.state,
+                                            jnp.asarray(tokens))
         self.stats["steps"] += 1
+        self.tracer.span("step.decode", tick=self.tick, role=self.role,
+                         active=sum(1 for c in counts if c),
+                         step=self.stats["steps"])
         now = time.perf_counter()
         if self.kv_cache == "paged":
             for i, entry in enumerate(self.slot_entry):
@@ -770,10 +843,14 @@ class Session:
                 tokens[i, 0] = self.slot_out[i][-1]
             else:
                 tokens[i, 0] = entry.req.prompt[-1]
-        self.state, logits = self._prefill(self.params, self.state,
-                                           jnp.asarray(tokens),
-                                           jnp.asarray(counts, jnp.int32))
+        with self._step_ctx("prefill"):
+            self.state, logits = self._prefill(
+                self.params, self.state, jnp.asarray(tokens),
+                jnp.asarray(counts, jnp.int32))
         self.stats["steps"] += 1
+        self.tracer.span("step.prefill", tick=self.tick, role=self.role,
+                         active=sum(1 for c in counts if c),
+                         tokens=sum(counts), step=self.stats["steps"])
         now = time.perf_counter()
         for i, entry in enumerate(self.slot_entry):
             if entry is not None:
@@ -804,11 +881,16 @@ class Session:
         if rec["first_token_time"] is None:
             rec["first_token_time"] = now
             rec["first_token_step"] = self.stats["steps"]
+            self.tracer.instant("req.first_token", tick=self.tick,
+                                role=self.role, slot=i, rid=req.rid)
         if len(self.slot_out[i]) >= req.max_new:
             self.results.append(Result(req.rid, self.slot_out[i]))
             rec["finish_time"] = now
             rec["n_generated"] = len(self.slot_out[i])
             rec["state"] = "completed"
+            self.tracer.instant("req.finish", tick=self.tick,
+                                role=self.role, slot=i, rid=req.rid,
+                                tokens=len(self.slot_out[i]))
             self.slot_entry[i] = None
             if self.kv_cache == "paged":
                 # return pages eagerly — don't wait for a refill

@@ -51,5 +51,11 @@ class DisaggRouter(Scheduler):
         if len(self.handoff) >= self.max_backlog:
             if self.queue:
                 self.stats["backpressure_blocks"] += 1
+                if self.obs is not None:
+                    self.obs("sched.block",
+                             rid=self.queue[0].req.rid,
+                             queued=len(self.queue),
+                             backpressure=True,
+                             backlog=len(self.handoff))
             return None
         return super().next_entry(fits, step=step)

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import kvstore as kvs
+from repro import obs as obs_mod
 from repro import resil as rsl
 from repro import sched as schd
 from repro.api.session import Request, Result, Session, _unserved_record
@@ -101,6 +102,8 @@ class PrefillSession(Session):
                 f"(family {self.cfg.family!r} keeps per-token recurrent "
                 "state that cannot ride a page migration)")
         self.sched = router            # same cfg, shared queue + backlog
+        if self.tracer.enabled:
+            self._wire_obs()           # re-attach hooks to the router
         self._on_handoff = on_handoff
         self.tick = 0                  # orchestrator clock (stamps handoffs)
 
@@ -243,7 +246,7 @@ class DisaggSession:
                  max_len: int = 256, seed: int = 0, backend=None,
                  page_size: int = 16, kv_dtype: Optional[str] = None,
                  scheduler=None, prefill_plan=None, decode_plan=None,
-                 resil=None):
+                 resil=None, obs=None):
         d = DisaggConfig.coerce(disagg)
         self.dcfg = d
         backlog = d.max_backlog if d.max_backlog is not None \
@@ -256,13 +259,16 @@ class DisaggSession:
             self.resil = resil
         else:
             self.resil = rsl.ResilState(rsl.ResilConfig.coerce(resil))
+        # one shared tracer: both roles and the orchestrator stamp events
+        # into the same timeline (per-role pids in the Chrome export)
+        self.tracer = obs if obs is not None else obs_mod.NULL
         self.pre = PrefillSession(
             cfg, params, batch_slots=d.prefill_slots, max_len=max_len,
             seed=seed, backend=backend, kv_cache="paged",
             page_size=page_size, kv_pool_pages=d.prefill_pool_pages,
             kv_dtype=kv_dtype, plan=prefill_plan,
             router=self.router, on_handoff=self._on_handoff,
-            resil=self.resil)
+            resil=self.resil, obs=obs)
         # decode shares the prefill role's (possibly shard-prepared)
         # params — one model, two pools
         self.dec = DecodeSession(
@@ -270,7 +276,7 @@ class DisaggSession:
             batch_slots=d.decode_slots, max_len=max_len, seed=seed,
             backend=backend, kv_cache="paged", page_size=page_size,
             kv_pool_pages=d.decode_pool_pages, kv_dtype=kv_dtype,
-            plan=decode_plan, resil=self.resil)
+            plan=decode_plan, resil=self.resil, obs=obs)
         self.pre.role = "prefill"
         self.dec.role = "decode"
         self._role_fail = {"prefill": 0, "decode": 0}  # fault streaks
@@ -296,6 +302,18 @@ class DisaggSession:
     def run_workload(self, arrivals: Sequence[Tuple[int, Request]],
                      max_steps: int = 10_000,
                      on_incomplete: str = "raise") -> List[Result]:
+        """Drive both roles on the shared tick clock.  A terminal
+        HealthError/OutOfPages dumps the flight recorder (when one is
+        attached to the tracer) before propagating."""
+        try:
+            return self._run_loop(arrivals, max_steps, on_incomplete)
+        except (rsl.HealthError, kvs.OutOfPages) as e:
+            self.tracer.crash(type(e).__name__, tick=self.ticks,
+                              error=str(e))
+            raise
+
+    def _run_loop(self, arrivals: Sequence[Tuple[int, Request]],
+                  max_steps: int, on_incomplete: str) -> List[Result]:
         pending: Deque[Tuple[int, Request]] = collections.deque(
             sorted(arrivals, key=lambda a: a[0]))
         clock = self.ticks
@@ -341,6 +359,10 @@ class DisaggSession:
                         self.pre.alloc.free(p for p in h.pages if p >= 0)
                         self.pre.stats["pages_in_use"] = \
                             self.pre.alloc.in_use
+                        self.tracer.instant(
+                            "handoff.oversized", tick=self.ticks,
+                            role="decode", rid=h.entry.req.rid,
+                            need=self.dec._page_need(h.entry))
                         self.pre._fail_entry(h.entry, "oversized")
                         warnings.warn(msg, RuntimeWarning, stacklevel=3)
                         continue
@@ -397,6 +419,11 @@ class DisaggSession:
             if delay:
                 h.ready_tick = max(h.ready_tick, h.tick + delay)
         self.router.push_handoff(h)
+        self.tracer.instant(
+            "handoff.enqueue", tick=self.ticks, role="prefill",
+            rid=h.entry.req.rid, pages=sum(1 for p in h.pages if p >= 0),
+            drops=h.drops, ready_tick=h.ready_tick,
+            backlog=len(self.router.handoff))
 
     def _step_role(self, sess: Session, name: str) -> bool:
         """Advance one role for one tick; injected faults burn the tick
@@ -545,6 +572,9 @@ class DisaggSession:
                 if e.record is not None:
                     e.record["degraded"] = "colocated-prefill"
                 self.resil.count("handoff_fallbacks")
+                self.tracer.instant(
+                    "handoff.fallback", tick=self.ticks, role="decode",
+                    rid=e.req.rid, waited=t - h.tick)
                 self.dec.sched.queue.append(e)
             else:
                 keep.append(h)
@@ -568,10 +598,19 @@ class DisaggSession:
             if slot is None or not self.dec.fits_handoff(h):
                 break
             del q[i]
-            self.dec.admit_handoff(slot, h, self.pre.state,
-                                   tick=self.ticks)
+            moved = self.dec.admit_handoff(slot, h, self.pre.state,
+                                           tick=self.ticks)
             self.pre.alloc.free(p for p in h.pages if p >= 0)
             self.pre.stats["pages_in_use"] = self.pre.alloc.in_use
+            rec = h.entry.record
+            self.tracer.instant(
+                "handoff.deliver", tick=self.ticks, role="decode",
+                slot=slot, rid=h.entry.req.rid,
+                waited=self.ticks - h.tick, drops=h.drops)
+            self.tracer.instant(
+                "handoff.migrate", tick=self.ticks, role="decode",
+                slot=slot, rid=h.entry.req.rid,
+                pages=rec["migrated_pages"], bytes=moved)
 
     def _incomplete(self, on_incomplete: str, blocked: bool,
                     pending: Sequence[Tuple[int, Request]] = ()) -> None:

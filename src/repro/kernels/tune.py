@@ -26,7 +26,6 @@ does not retroactively change that step.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -144,21 +143,14 @@ def autotune(key: Key, candidates: Sequence[KernelChoice],
     a busy host and a wrong pick taxes every decode step afterwards.
     Candidates that fail to compile or run are skipped; an already-cached
     key returns immediately."""
-    import jax
+    from repro.obs import timeit
     cached = get(key)
     if cached is not None:
         return cached
     best: Optional[KernelChoice] = None
     for cand in candidates:
         try:
-            jax.block_until_ready(runner(cand))          # warmup/compile
-            t_best = float("inf")
-            for _ in range(reps):
-                t0 = time.perf_counter()
-                for _ in range(inner):
-                    out = runner(cand)
-                jax.block_until_ready(out)
-                t_best = min(t_best, (time.perf_counter() - t0) / inner)
+            t_best = timeit(runner, cand, reps=reps, inner=inner)
         except Exception:
             continue
         timed = dataclasses.replace(cand, us=t_best * 1e6)
@@ -335,9 +327,9 @@ def choose_block_rows(w: np.ndarray, mode: str, density: float,
     pruned matrix per candidate and times the fused kernel).  Cached by
     (shape, mode); only consulted when REPRO_TUNE_BLOCK_ROWS=1 since
     re-encoding per candidate is much slower than the (mb, bk) search."""
-    import jax
     import jax.numpy as jnp
     from repro.kernels import acsr_spmv as sp
+    from repro.obs import timeit
 
     key = (w.shape, mode, density)
     if key in _BLOCK_ROWS_CACHE:
@@ -356,15 +348,9 @@ def choose_block_rows(w: np.ndarray, mode: str, density: float,
                 blocked = sp.block_encode_coded(w, cents, block_rows=br)
             else:
                 blocked = sp.block_encode(w, block_rows=br)
-            out = sp.acsr_spmv(blocked, x, interpret=interpret)
-            jax.block_until_ready(out)
-            dt = float("inf")  # best-of-3 samples of 3 calls (noise floor)
-            for _ in range(3):
-                t0 = time.perf_counter()
-                for _ in range(3):
-                    out = sp.acsr_spmv(blocked, x, interpret=interpret)
-                jax.block_until_ready(out)
-                dt = min(dt, (time.perf_counter() - t0) / 3)
+            # best-of-3 samples of 3 calls (noise floor on a busy host)
+            dt = timeit(sp.acsr_spmv, blocked, x, interpret=interpret,
+                        reps=3, inner=3)
         except Exception:
             continue
         if dt < best_t:

@@ -14,7 +14,7 @@ the page returns to the free list only when its last owner lets go.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List
+from typing import Callable, Dict, Iterable, List, Optional
 
 from repro.kvstore.pool import GARBAGE_PAGE
 
@@ -37,7 +37,24 @@ class PageAllocator:
         # fault-injection seam (repro.resil page-spike): pages temporarily
         # treated as unavailable.  Affects available/alloc/alloc_many only
         # — pages already granted are never clawed back.
-        self.holdback = 0
+        self._holdback = 0
+        # observability seam: a ``(name, **args)`` emitter (obs.Tracer
+        # .hook) attached by the owning Session when tracing is on; None
+        # keeps every alloc/free on the exact pre-obs path.
+        self.obs: Optional[Callable] = None
+
+    @property
+    def holdback(self) -> int:
+        return self._holdback
+
+    @holdback.setter
+    def holdback(self, n: int) -> None:
+        # the resil layer re-derives the holdback every tick; only a
+        # CHANGE is a spike edge worth an event
+        if self.obs is not None and n != self._holdback:
+            self.obs("alloc.holdback", pages=int(n),
+                     prev=int(self._holdback))
+        self._holdback = n
 
     # ------------------------------------------------------------- queries
     @property
@@ -65,6 +82,8 @@ class PageAllocator:
         self._ref[pid] = 1
         self.total_allocs += 1
         self.peak = max(self.peak, self.in_use)
+        if self.obs is not None:
+            self.obs("alloc.pages", n=1, in_use=self.in_use)
         return pid
 
     def alloc_many(self, n: int) -> List[int]:
@@ -95,6 +114,7 @@ class PageAllocator:
         """Drop one owner per listed page; a page with remaining owners
         stays resident.  Unallocated ids are skipped (idempotent — a slot
         reset may race a request-completion free)."""
+        freed = 0
         for pid in pages:
             if pid == GARBAGE_PAGE or pid < 0:
                 continue
@@ -106,6 +126,9 @@ class PageAllocator:
             del self._ref[pid]
             self._used.remove(pid)
             self._free.append(pid)
+            freed += 1
+        if self.obs is not None and freed:
+            self.obs("alloc.free", n=freed, in_use=self.in_use)
 
 
 def reclaimable_prefix(cur_pos: int, window: int, page_size: int) -> int:

@@ -144,6 +144,21 @@ def main():
                     help="recompute re-admissions allowed per request "
                          "before it fails with 'retries_exhausted' "
                          "(default 2 when the resil layer is on)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON "
+                         "timeline of every serving seam (repro.obs); "
+                         "tick-clock timestamps, so two same-seed runs "
+                         "produce byte-identical traces")
+    ap.add_argument("--trace-ring", type=int, default=None, metavar="N",
+                    help="keep the last N events in a flight-recorder "
+                         "ring; dumped to disk automatically on a "
+                         "terminal HealthError/OutOfPages/RequestFailed")
+    ap.add_argument("--profile-dir", default=None, metavar="PATH",
+                    help="wrap the serve in a jax.profiler trace "
+                         "(TensorBoard-loadable device profile)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the run's metrics + resil + role summary "
+                         "as machine-readable JSON (with provenance)")
     args = ap.parse_args()
 
     resil = None
@@ -209,13 +224,27 @@ def main():
                   "decode_slots": args.decode_slots,
                   "prefill_devices": args.prefill_devices,
                   "decode_devices": args.decode_devices}
+    tracer = None
+    if args.trace is not None or args.trace_ring is not None:
+        from repro.obs import FlightRecorder, Tracer
+        recorder = None
+        if args.trace_ring is not None:
+            if args.trace_ring < 1:
+                ap.error("--trace-ring must be >= 1")
+            out_dir = (os.path.dirname(os.path.abspath(args.trace))
+                       if args.trace is not None else ".")
+            recorder = FlightRecorder(capacity=args.trace_ring,
+                                      out_dir=out_dir)
+        tracer = Tracer(capture=args.trace is not None,
+                        recorder=recorder)
     sess = eng.session(batch_slots=args.slots, max_len=max_len,
                        kv_cache=args.kv_cache,
                        kv_pool_pages=args.kv_pool_pages,
                        scheduler=SchedConfig(
                            policy=args.policy, chunk=args.chunk,
                            prefix_cache=args.prefix_cache),
-                       mesh=mesh, disagg=disagg, resil=resil)
+                       mesh=mesh, disagg=disagg, resil=resil,
+                       obs=tracer)
     pre = sess.pre if args.disagg else sess
     print(f"[serve] workload={args.workload} seed={args.seed} "
           f"kv={pre.kv_cache} chunk={pre.chunk} policy={args.policy}"
@@ -225,11 +254,13 @@ def main():
               f"{args.fault_plan or 'none'} "
               f"deadline_ticks={args.deadline_ticks} "
               f"max_retries={resil.get('max_retries', 2)}")
+    from repro.obs import profile_trace
     t0 = time.perf_counter()
     # injected faults / deadlines make partial completion an expected
     # outcome — report it instead of raising
-    results = sess.run_workload(
-        arrivals, on_incomplete="warn" if resil is not None else "raise")
+    with profile_trace(args.profile_dir):
+        results = sess.run_workload(
+            arrivals, on_incomplete="warn" if resil is not None else "raise")
     dt = time.perf_counter() - t0
     rsumm = sess.resil_summary() if resil is not None else None
     if args.disagg:
@@ -276,6 +307,49 @@ def main():
         print(f"[serve] pages: peak {sess.stats['pages_peak']}, "
               f"allocs {sess.stats['page_allocs']}, "
               f"reclaimed(SWA) {sess.stats['pages_reclaimed_swa']}")
+    if args.trace is not None:
+        tracer.export(args.trace)
+        wall = tracer.wall.summary()
+        line = f"[serve] trace: {len(tracer.events)} events -> {args.trace}"
+        if wall:
+            line += "; wall " + ", ".join(
+                f"{k} {v['seconds']:.2f}s/{v['calls']}" for k, v
+                in wall.items())
+        print(line)
+    if args.profile_dir is not None:
+        print(f"[serve] profile: jax trace -> {args.profile_dir}")
+    if args.json is not None:
+        import json
+
+        from repro.obs import provenance
+        if args.disagg:
+            pages = {"prefill_peak": sess.pre.stats["pages_peak"],
+                     "decode_peak": sess.dec.stats["pages_peak"],
+                     "leaked": sess.pre.alloc.in_use
+                     + sess.dec.alloc.in_use}
+        elif sess.kv_cache == "paged":
+            pages = {"peak": sess.stats["pages_peak"],
+                     "allocs": sess.stats["page_allocs"],
+                     "leaked": sess.alloc.in_use}
+        else:
+            pages = None
+        dump = {
+            "provenance": provenance(
+                config=cfg.name, mode=args.compress or "dense",
+                seed=args.seed, backend=eng.backend.name,
+                workload=args.workload, disagg=bool(args.disagg)),
+            "metrics": m,
+            "failed": [{"rid": f.rid, "reason": f.reason,
+                        "retries": f.retries}
+                       for f in (sess.failed if resil is not None else [])],
+            "pages": pages,
+        }
+        if tracer is not None:
+            dump["wall_phases"] = tracer.wall.summary()
+        with open(args.json, "w") as f:
+            json.dump(dump, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[serve] json: metrics -> {args.json}")
 
 
 if __name__ == "__main__":

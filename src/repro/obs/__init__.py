@@ -1,0 +1,29 @@
+"""`repro.obs` — unified observability for the serving stack.
+
+Three layers, one package:
+
+* **trace** — deterministic tick-clock event stream (spans + instants)
+  from every seam of the stack, exported as Chrome/Perfetto
+  ``trace_event`` JSON; byte-identical across same-seed replays.
+* **registry** — typed counter/gauge/histogram aggregation that
+  `sched/metrics.summarize()` is built on, plus :func:`provenance`
+  run-context headers for BENCH sections.
+* **recorder** — bounded flight-recorder ring of recent events, dumped
+  to disk automatically on ``HealthError`` / ``RequestFailed`` /
+  ``OutOfPages``.
+
+Plus :func:`timeit` (the one best-of-N wall timer) and
+:func:`profile_trace` (optional ``jax.profiler`` hook).
+"""
+from repro.obs.recorder import FlightRecorder
+from repro.obs.registry import (Counter, Gauge, Histogram, Registry,
+                                percentile, provenance)
+from repro.obs.timing import timeit
+from repro.obs.trace import (NULL, NullTracer, Tracer, WallTimers,
+                             profile_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "percentile",
+    "provenance", "FlightRecorder", "timeit", "NULL", "NullTracer",
+    "Tracer", "WallTimers", "profile_trace",
+]

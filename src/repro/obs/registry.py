@@ -1,0 +1,148 @@
+"""Typed metrics registry + run provenance.
+
+`sched/metrics.py` is rewritten on top of these primitives: a
+:class:`Counter` for monotonically increasing totals, a :class:`Gauge`
+for point-in-time values, and a :class:`Histogram` whose ``summary()``
+is the mean/p50/p99 shape every BENCH section reports.  The registry is
+deliberately tiny — no labels, no time series — because the stack's
+clock is the scheduler tick and the per-tick stream lives in
+``obs.trace``; this layer only aggregates.
+
+:func:`provenance` stamps the run context (config, mode, seed, backend,
+jax version, git sha, timestamp) into BENCH sections so a regression is
+attributable to the run that produced it.
+"""
+from __future__ import annotations
+
+import datetime
+import os
+import subprocess
+from typing import Dict, List, Optional
+
+
+def percentile(values: List[float], q: float) -> Optional[float]:
+    """Nearest-rank percentile; None on empty input."""
+    if not values:
+        return None
+    xs = sorted(values)
+    idx = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[idx]
+
+
+class Counter:
+    """Monotonically increasing total."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Point-in-time value (last write wins)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value: Optional[float] = None
+
+    def set(self, v: Optional[float]) -> None:
+        self.value = v
+
+
+class Histogram:
+    """Value distribution; ``summary()`` is the canonical BENCH shape
+    ``{"mean","p50","p99"}`` (rounded, None when empty)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.values: List[float] = []
+
+    def observe(self, v: float) -> None:
+        self.values.append(float(v))
+
+    def observe_many(self, vs) -> None:
+        self.values.extend(float(v) for v in vs)
+
+    def summary(self, scale: float = 1.0, digits: int = 4) -> Optional[dict]:
+        if not self.values:
+            return None
+        xs = [v * scale for v in self.values]
+        return {
+            "mean": round(sum(xs) / len(xs), digits),
+            "p50": round(percentile(xs, 50), digits),
+            "p99": round(percentile(xs, 99), digits),
+        }
+
+
+class Registry:
+    """Get-or-create namespace of typed metrics.
+
+    One registry per summarize() call / serve run; ``snapshot()``
+    returns plain dicts so callers can json-dump it directly.
+    """
+
+    def __init__(self):
+        self.counters: Dict[str, Counter] = {}
+        self.gauges: Dict[str, Gauge] = {}
+        self.histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        if name not in self.counters:
+            self.counters[name] = Counter(name)
+        return self.counters[name]
+
+    def gauge(self, name: str) -> Gauge:
+        if name not in self.gauges:
+            self.gauges[name] = Gauge(name)
+        return self.gauges[name]
+
+    def histogram(self, name: str) -> Histogram:
+        if name not in self.histograms:
+            self.histograms[name] = Histogram(name)
+        return self.histograms[name]
+
+    def snapshot(self) -> dict:
+        return {
+            "counters": {k: c.value for k, c in sorted(self.counters.items())},
+            "gauges": {k: g.value for k, g in sorted(self.gauges.items())},
+            "histograms": {k: h.summary() for k, h
+                           in sorted(self.histograms.items())},
+        }
+
+
+def _git_sha() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        return sha or None
+    except Exception:
+        return None
+
+
+def provenance(config: Optional[str] = None, mode: Optional[str] = None,
+               seed: Optional[int] = None, backend: Optional[str] = None,
+               **extra) -> dict:
+    """Run-context header stamped into BENCH sections and ``--json``
+    dumps: enough to attribute a number to the run that produced it."""
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = None
+    info = {
+        "config": config,
+        "mode": mode,
+        "seed": seed,
+        "backend": backend,
+        "jax": jax_version,
+        "git_sha": _git_sha(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    info.update(extra)
+    return info

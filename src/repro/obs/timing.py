@@ -1,0 +1,36 @@
+"""`obs.timeit` — the one best-of-N wall timer for kernels and steps.
+
+Replaces the three hand-rolled warmup/min-of-N loops that used to live
+in `kernels/tune.py` (autotune + choose_block_rows) and
+`api/engine.py` (`_attn_fc_share`): one warmup call to absorb
+compilation, then ``reps`` samples of ``inner`` back-to-back calls with
+the best per-call mean kept.  Sub-ms kernels need the inner loop —
+single-call samples are noise on a busy host — and min-of-reps is the
+standard noise-floor estimator.
+"""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *args, reps: int = 3, inner: int = 3,
+           warmup: int = 1, **kw) -> float:
+    """Best per-call seconds for ``fn(*args, **kw)``.
+
+    ``warmup`` calls run first (blocked on) to absorb compilation; then
+    ``reps`` samples of ``inner`` back-to-back calls, blocking once per
+    sample, keeping the minimum per-call mean.  Raises whatever the
+    first call raises — callers that tolerate failing candidates (the
+    autotuner) keep their own try/except.
+    """
+    import jax
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best

@@ -30,11 +30,16 @@ from typing import Dict, Optional
 
 
 class InjectedFault(RuntimeError):
-    """A deliberately injected fault (not a bug). Carries its class."""
+    """A deliberately injected fault (not a bug). Carries its class and
+    the (role, tick) coordinates of the decision so catchers can trace
+    the injection without re-deriving them."""
 
-    def __init__(self, fault_class: str, msg: str):
+    def __init__(self, fault_class: str, msg: str,
+                 role: Optional[str] = None, tick: Optional[int] = None):
         super().__init__(msg)
         self.fault_class = fault_class
+        self.role = role
+        self.tick = tick
 
 
 # Built-in presets. Window starts get a small seed-derived jitter so
@@ -133,7 +138,8 @@ class FaultPlan:
         cls = self.step_fault(role, tick)
         if cls is not None:
             self._count(cls)
-            raise InjectedFault(cls, f"{cls}: role={role} tick={tick}")
+            raise InjectedFault(cls, f"{cls}: role={role} tick={tick}",
+                                role=role, tick=tick)
 
     # ---- handoff seam ---------------------------------------------------
     def drop_handoff(self, rid: int, attempt: int) -> bool:

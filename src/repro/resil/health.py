@@ -92,6 +92,9 @@ class Watchdog:
             raise ValueError("watchdog cadence must be >= 1 tick")
         self.every = every
         self.audits = 0
+        # observability seam: a ``(name, **args)`` emitter (obs.Tracer
+        # .hook); every audit emits health.audit with its issue count.
+        self.obs = None
 
     def due(self, tick: int) -> bool:
         return tick > 0 and tick % self.every == 0
@@ -100,6 +103,10 @@ class Watchdog:
               ) -> None:
         self.audits += 1
         issues = audit_session(sess, extra_refs=extra_refs)
+        if self.obs is not None:
+            self.obs("health.audit",
+                     target=getattr(sess, "role", "engine"),
+                     issues=len(issues))
         if issues:
             raise HealthError(
                 "watchdog audit failed: " + "; ".join(issues[:5]))

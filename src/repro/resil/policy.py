@@ -119,18 +119,25 @@ class DegradeState:
         self.sustain = max(1, sustain)
         self.low_ticks = 0
         self.level = 0
+        # observability seam: a ``(name, **args)`` emitter (obs.Tracer
+        # .hook); fires only on level TRANSITIONS, never per tick.
+        self.obs = None
 
     def update(self, free_frac: float) -> int:
         if free_frac < self.low_frac:
             self.low_ticks += 1
         elif free_frac > self.high_frac:
             self.low_ticks = 0
+        prev = self.level
         if self.low_ticks >= self.sustain:
             self.level = 2
         elif self.low_ticks >= (self.sustain + 1) // 2:
             self.level = 1
         else:
             self.level = 0
+        if self.obs is not None and self.level != prev:
+            self.obs("resil.degrade", level=self.level, prev=prev,
+                     free_frac=round(free_frac, 4))
         return self.level
 
     @property

@@ -6,6 +6,13 @@ folds them into the JSON-ready `"serving"` record that
 `Engine.benchmark` writes to BENCH_api.json and
 `benchmarks/check_regression.py` gates.
 
+Since PR 8 the folding runs on the typed `repro.obs.registry`
+primitives — counters for totals, histograms for distributions — so the
+serving summary, the ``--json`` dump, and every BENCH section share one
+aggregation layer.  The *output shape is unchanged*: `summarize()`
+returns the exact pre-registry key set (tests pin it), the registry is
+an implementation substrate, not a new schema.
+
 Step-denominated numbers (`first_token_calls`, preemptions, prefix
 pages) are deterministic for a given workload — those carry the hard CI
 assertions; wall-clock numbers (TTFT seconds, tok/s, goodput) are the
@@ -25,25 +32,29 @@ total ticks).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
+
+from repro.obs.registry import Histogram, Registry
+from repro.obs.registry import percentile as percentile  # re-export
 
 
-def percentile(values: Sequence[float], q: float) -> Optional[float]:
-    """Nearest-rank percentile (q in [0, 100]); None on empty input."""
-    if not values:
-        return None
-    xs = sorted(values)
-    k = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
-    return xs[k]
+#: the stable top-level key set of `summarize()` — the schema contract
+#: BENCH sections and downstream tooling rely on.  Conditional keys
+#: appear only when their record family is present.
+SUMMARY_KEYS = (
+    "requests", "completed", "tokens", "seconds", "steps", "tok_per_s",
+    "goodput_req_per_s", "ttft_s", "ttft_sched", "tpot_s",
+    "first_token_calls", "preemptions", "prefix_pages_reused",
+)
+SUMMARY_KEYS_CONDITIONAL = ("outcomes", "resil", "handoff", "roles")
 
 
 def _dist(values: Sequence[float], scale: float = 1.0) -> Optional[dict]:
-    if not values:
-        return None
-    vs = [v * scale for v in values]
-    return {"mean": round(sum(vs) / len(vs), 4),
-            "p50": round(percentile(vs, 50), 4),
-            "p99": round(percentile(vs, 99), 4)}
+    """mean/p50/p99 of a value list via a throwaway Histogram — the
+    canonical distribution record; None on empty input."""
+    h = Histogram("_dist")
+    h.observe_many(values)
+    return h.summary(scale=scale)
 
 
 def _rate(num: float, denom: float, digits: int = 2) -> Optional[float]:
@@ -77,17 +88,21 @@ def _outcomes(records: Sequence[Dict]) -> Optional[dict]:
     pre-resil callers).  ``failed_by_reason`` attributes every
     structured failure (deadline / shed / retries_exhausted /
     oversized) so denominators stay honest under faults."""
-    states = [r.get("state") for r in records if r.get("state")]
+    reg = Registry()
+    for r in records:
+        s = r.get("state")
+        if not s:
+            continue
+        reg.counter(s).inc()
+        if s == "failed" and r.get("failed_reason"):
+            reg.counter(f"failed/{r['failed_reason']}").inc()
+    counts = {k: c.value for k, c in reg.counters.items()}
+    states = {k: v for k, v in counts.items() if not k.startswith("failed/")}
     if not states:
         return None
-    out: Dict[str, int] = {}
-    for s in states:
-        out[s] = out.get(s, 0) + 1
-    reasons: Dict[str, int] = {}
-    for r in records:
-        if r.get("state") == "failed" and r.get("failed_reason"):
-            why = r["failed_reason"]
-            reasons[why] = reasons.get(why, 0) + 1
+    out: Dict[str, int] = dict(states)
+    reasons = {k.split("/", 1)[1]: v for k, v in counts.items()
+               if k.startswith("failed/")}
     if reasons:
         out["failed_by_reason"] = reasons
     return out
@@ -111,43 +126,59 @@ def summarize(records: Sequence[Dict], span_seconds: float,
     — shed/retry/deadline-miss/degraded plus per-fault-class injection
     counts; folded through as a ``"resil"`` record.
     """
-    done = [r for r in records if r.get("finish_time") is not None]
-    ttft = [r["first_token_time"] - r["submit_time"] for r in records
-            if r.get("first_token_time") is not None]
-    tpot: List[float] = []
-    for r in done:
+    reg = Registry()
+    requests = reg.counter("requests")
+    completed = reg.counter("completed")
+    tokens = reg.counter("tokens")
+    preempts = reg.counter("preemptions")
+    prefix_pages = reg.counter("prefix_pages_reused")
+    ttft = reg.histogram("ttft_s")
+    tpot = reg.histogram("tpot_s")
+    first_calls = reg.histogram("first_token_calls")
+    ttft_tick = reg.histogram("ttft_ticks")
+    ttft_step = reg.histogram("ttft_steps")
+    for r in records:
+        requests.inc()
+        preempts.inc(r.get("preemptions", 0))
+        prefix_pages.inc(r.get("prefix_pages", 0))
+        if r.get("first_token_time") is not None:
+            ttft.observe(r["first_token_time"] - r["submit_time"])
+        if r.get("first_token_step") is not None:
+            if r.get("admit_step") is not None:
+                first_calls.observe(r["first_token_step"]
+                                    - r["admit_step"])
+            if r.get("submit_step") is not None:
+                ttft_step.observe(r["first_token_step"]
+                                  - r["submit_step"])
+        if r.get("first_token_tick") is not None \
+                and r.get("submit_tick") is not None:
+            ttft_tick.observe(r["first_token_tick"] - r["submit_tick"])
+        if r.get("finish_time") is None:
+            continue
+        completed.inc()
+        tokens.inc(r["n_generated"])
         if r["n_generated"] > 1 and r.get("first_token_time") is not None:
-            tpot.append((r["finish_time"] - r["first_token_time"])
-                        / (r["n_generated"] - 1))
-    first_calls = [r["first_token_step"] - r["admit_step"] for r in records
-                   if r.get("first_token_step") is not None
-                   and r.get("admit_step") is not None]
+            tpot.observe((r["finish_time"] - r["first_token_time"])
+                         / (r["n_generated"] - 1))
     # scheduling-clock TTFT, comparable across engine shapes: a
     # disaggregated run stamps submit/first-token in orchestrator ticks
     # (one tick = one scheduling opportunity per role); a co-located run
     # falls back to the model-call step clock, which is its tick
-    ttft_sched = [r["first_token_tick"] - r["submit_tick"] for r in records
-                  if r.get("first_token_tick") is not None
-                  and r.get("submit_tick") is not None] or \
-                 [r["first_token_step"] - r["submit_step"] for r in records
-                  if r.get("first_token_step") is not None
-                  and r.get("submit_step") is not None]
-    n_tok = sum(r["n_generated"] for r in done)
+    ttft_sched = ttft_tick if ttft_tick.values else ttft_step
     out = {
-        "requests": len(records),
-        "completed": len(done),
-        "tokens": n_tok,
+        "requests": requests.value,
+        "completed": completed.value,
+        "tokens": tokens.value,
         "seconds": round(span_seconds, 4),
         "steps": steps,
-        "tok_per_s": _rate(n_tok, span_seconds),
-        "goodput_req_per_s": _rate(len(done), span_seconds, 3),
-        "ttft_s": _dist(ttft),
-        "ttft_sched": _dist(ttft_sched),
-        "tpot_s": _dist(tpot),
-        "first_token_calls": _dist(first_calls) if first_calls else None,
-        "preemptions": sum(r.get("preemptions", 0) for r in records),
-        "prefix_pages_reused": sum(r.get("prefix_pages", 0)
-                                   for r in records),
+        "tok_per_s": _rate(tokens.value, span_seconds),
+        "goodput_req_per_s": _rate(completed.value, span_seconds, 3),
+        "ttft_s": ttft.summary(),
+        "ttft_sched": ttft_sched.summary(),
+        "tpot_s": tpot.summary(),
+        "first_token_calls": first_calls.summary(),
+        "preemptions": preempts.value,
+        "prefix_pages_reused": prefix_pages.value,
     }
     outcomes = _outcomes(records)
     if outcomes is not None:

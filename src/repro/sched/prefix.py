@@ -63,6 +63,9 @@ class PrefixCache:
         self.misses = 0
         self.inserted = 0
         self.released = 0
+        # observability seam: a ``(name, **args)`` emitter (obs.Tracer
+        # .hook) attached by the owning Session; None = no tracing.
+        self.obs = None
 
     # ------------------------------------------------------------ queries
     @property
@@ -97,6 +100,8 @@ class PrefixCache:
             return None
         self._entries.move_to_end(h)
         self.hits += 1
+        if self.obs is not None:
+            self.obs("prefix.hit", page=pid)
         return pid
 
     def insert(self, h: bytes, pid: int, allocator) -> bool:
@@ -108,6 +113,8 @@ class PrefixCache:
         allocator.ref(pid)
         self._entries[h] = pid
         self.inserted += 1
+        if self.obs is not None:
+            self.obs("prefix.pin", page=pid, pinned=len(self._entries))
         if self.capacity is not None and len(self._entries) > self.capacity:
             self.release(allocator, 1)
         return True
@@ -123,6 +130,9 @@ class PrefixCache:
             allocator.free([pid])
             dropped += 1
         self.released += dropped
+        if self.obs is not None and dropped:
+            self.obs("prefix.release", n=dropped,
+                     pinned=len(self._entries))
         return dropped
 
     def clear(self, allocator) -> int:

@@ -102,6 +102,9 @@ class Scheduler:
         self.queue: Deque[SchedEntry] = collections.deque()
         self._seq = 0
         self.stats = {"preemptions": 0, "admission_blocks": 0}
+        # observability seam: a ``(name, **args)`` emitter (obs.Tracer
+        # .hook) attached by the owning Session; None = no tracing.
+        self.obs = None
 
     # ------------------------------------------------------------ queue
     def __len__(self) -> int:
@@ -165,6 +168,9 @@ class Scheduler:
                 self._seq += 1
                 return e
             self.stats["admission_blocks"] += 1
+            if self.obs is not None:
+                self.obs("sched.block", rid=e.req.rid,
+                         queued=len(self.queue))
             if self.cfg.policy == "fifo" or aged:
                 return None        # head-of-line blocks
         return None
