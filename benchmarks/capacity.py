@@ -1,0 +1,158 @@
+"""Capacity planner: replay a workload (or a recorded trace) across a
+config sweep and name the smallest config meeting a declared SLO.
+
+  PYTHONPATH=src python benchmarks/capacity.py --smoke --out capacity.json
+  PYTHONPATH=src python benchmarks/capacity.py --from-trace trace_a.json \
+      --slo "ttft_p99=20,goodput=1.0"
+  PYTHONPATH=src python benchmarks/capacity.py \
+      --sweep "slots=2,pages=16,chunk=4,policy=fifo;slots=4,pages=24,chunk=4,policy=fifo"
+
+The sweep drives `Engine.capacity_benchmark`: each (slots,
+kv_pool_pages, chunk, policy) point serves the same request stream —
+a `sched.workload` preset, or the exact (arrival_tick, prompt_len,
+max_new) stream reconstructed from a `--trace` export via
+`WorkloadSpec.from_trace` — with a live tracer, and each run's trace is
+fed through `repro.obs.analyze` for the SLO verdict.  Every number in
+the output is tick-denominated, so the whole report (including which
+config is "chosen") is deterministic: CI runs this twice and diffs the
+bytes.
+
+Exit status: 0 when some swept config meets the SLO, 1 when none does
+(the sweep is undersized for the workload — add capacity).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.api.engine import (CAPACITY_SLO, CAPACITY_SMOKE_SWEEP,  # noqa: E402
+                              Engine)
+from repro.configs import get, reduced  # noqa: E402
+from repro.obs.analyze import SLOSpec  # noqa: E402
+from repro.sched import WorkloadSpec  # noqa: E402
+from repro.sched.workload import PRESETS  # noqa: E402
+
+#: the default full sweep: slots x pool x policy around the smoke points
+FULL_SWEEP = tuple(
+    {"slots": s, "kv_pool_pages": p, "chunk": c, "policy": pol}
+    for s in (1, 2, 4)
+    for p in (16, 32)
+    for c in (4, 8)
+    for pol in ("fifo", "sjf"))
+
+_KEYS = {"slots": "slots", "pages": "kv_pool_pages",
+         "kv_pool_pages": "kv_pool_pages", "chunk": "chunk",
+         "policy": "policy"}
+
+
+def parse_sweep(arg: str):
+    """``"slots=2,pages=16,chunk=4,policy=fifo;slots=4,..."`` — one
+    config per ``;``-separated group."""
+    out = []
+    for group in arg.split(";"):
+        group = group.strip()
+        if not group:
+            continue
+        c = {}
+        for term in group.split(","):
+            k, sep, v = term.partition("=")
+            k = k.strip().lower()
+            if not sep or k not in _KEYS:
+                raise ValueError(f"bad sweep term {term!r} (keys: "
+                                 f"{sorted(set(_KEYS))})")
+            key = _KEYS[k]
+            c[key] = v.strip() if key == "policy" else \
+                (None if v.strip().lower() == "none" else int(v))
+        out.append(c)
+    if not out:
+        raise ValueError(f"empty sweep {arg!r}")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--workload", default="burst", choices=list(PRESETS),
+                    help="request-mix preset to replay (ignored with "
+                         "--from-trace)")
+    ap.add_argument("--from-trace", default=None, metavar="PATH",
+                    help="replay the exact (arrival_tick, prompt_len, "
+                         "max_new) stream recorded in a serve --trace "
+                         "export (WorkloadSpec.from_trace)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slo", default=CAPACITY_SLO, metavar="SPEC",
+                    help="declared SLO, scheduler-tick units "
+                         f"(default: {CAPACITY_SLO})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="2-point sweep (one under-provisioned, one "
+                         "adequate) — the CI gate configuration")
+    ap.add_argument("--sweep", default=None, metavar="SPEC",
+                    help="explicit sweep: "
+                         "'slots=2,pages=16,chunk=4,policy=fifo;...'")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write {'capacity': section} JSON "
+                         "(deterministic bytes — CI diffs two runs)")
+    args = ap.parse_args()
+
+    try:
+        slo = SLOSpec.parse(args.slo)
+    except ValueError as e:
+        ap.error(str(e))
+    sweep = None
+    if args.sweep is not None:
+        try:
+            sweep = parse_sweep(args.sweep)
+        except ValueError as e:
+            ap.error(str(e))
+    elif args.smoke:
+        sweep = [dict(c) for c in CAPACITY_SMOKE_SWEEP]
+    else:
+        sweep = [dict(c) for c in FULL_SWEEP]
+
+    cfg = get(args.arch) if args.full_size else reduced(get(args.arch))
+    eng = Engine(cfg)
+    if args.from_trace is not None:
+        workload = WorkloadSpec.from_trace(
+            args.from_trace, vocab=cfg.vocab, seed=args.seed)
+        src = f"trace:{args.from_trace} ({workload.n_requests} requests)"
+    else:
+        workload = args.workload
+        src = f"preset:{args.workload} ({args.requests} requests)"
+    print(f"[capacity] {cfg.name}: {src}, slo {slo.describe()}, "
+          f"{len(sweep)} configs")
+    section = eng.capacity_benchmark(
+        workload=workload, n_requests=args.requests, sweep=sweep,
+        slo=slo, page_size=args.page_size, max_len=args.max_len,
+        seed=args.seed)
+    for e in section["sweep"]:
+        m = e["metrics"]
+        parts = [f"{name} {rec['value']}"
+                 + ("" if rec["pass"] else
+                    f" > {rec['bound']}" if name != "goodput"
+                    else f" < {rec['bound']}")
+                 for name, rec in sorted(m.items())]
+        mark = "PASS" if e["slo_pass"] else "fail"
+        print(f"  {e['label']:45s} {mark}  " + "  ".join(parts)
+              + f"  ({e['completed']}/{e['requests']} done, "
+                f"{e['span_ticks']} ticks)")
+    chosen = section["chosen"]
+    print(f"[capacity] chosen: "
+          f"{chosen or 'NONE — no swept config meets the SLO'}; "
+          f"replay deterministic: {section['deterministic_replay']}")
+    if args.out is not None:
+        with open(args.out, "w") as f:
+            json.dump({"capacity": section}, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[capacity] -> {args.out}")
+    return 0 if chosen is not None else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

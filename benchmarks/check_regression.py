@@ -54,6 +54,14 @@ And the resilience section ("resil"):
     zero leaked pages, and counters identical across a same-seed
     replay — all deterministic, all gate hard (goodput_vs_clean is
     trajectory only).
+
+And the capacity section ("capacity"):
+  * every number is tick-denominated, so everything gates hard: the
+    burst sweep must name a smallest SLO-meeting config ("chosen"
+    non-null), the chosen config's trace re-analysis must be
+    byte-deterministic, and every swept point's per-request
+    critical-path segments must sum to its submit->finish span
+    (``segments_ok`` — the obs.analyze attribution invariant).
 """
 from __future__ import annotations
 
@@ -116,6 +124,44 @@ def check(new: dict, base: dict, tol: float, log=print) -> bool:
     ok &= check_sharding(new, base, tol, log=log)
     ok &= check_disagg(new, base, tol, log=log)
     ok &= check_resil(new, base, tol, log=log)
+    ok &= check_capacity(new, base, tol, log=log)
+    return ok
+
+
+def check_capacity(new: dict, base: dict, tol: float, log=print) -> bool:
+    """Capacity-planning gate — tick-denominated, so every fact gates
+    hard: the sweep must be non-empty, name a smallest SLO-meeting
+    config, hold the critical-path attribution invariant on every swept
+    point, and re-analyze byte-identically on replay.  The baseline is
+    not consulted (there are no wall-clock numbers to compare)."""
+    cap = new.get("capacity")
+    if cap is None:
+        log("  capacity section MISSING from new run")
+        return False
+    ok = True
+    sweep = cap.get("sweep") or []
+    if not sweep:
+        log("  capacity sweep is empty")
+        ok = False
+    if cap.get("chosen") is None:
+        log("  capacity sweep found NO config meeting the SLO "
+            f"{cap.get('slo')} — the planner cannot answer the sizing "
+            "question")
+        ok = False
+    if not cap.get("deterministic_replay"):
+        log("  capacity chosen-config re-analysis diverged — the trace "
+            "report is not a pure function of the trace")
+        ok = False
+    bad_seg = [e.get("label") for e in sweep if not e.get("segments_ok")]
+    if bad_seg:
+        log(f"  capacity critical-path segments do not sum to request "
+            f"spans on: {bad_seg}")
+        ok = False
+    if ok:
+        n_pass = sum(1 for e in sweep if e.get("slo_pass"))
+        log(f"  capacity   {len(sweep)} configs swept, {n_pass} meet "
+            f"SLO, chosen {cap.get('chosen')}  "
+            "replay-deterministic  OK")
     return ok
 
 

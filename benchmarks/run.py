@@ -157,6 +157,13 @@ def bench_api(out_path: str = "BENCH_api.json") -> dict:
               f"{'parity OK, 0 leaks, deterministic' if all_ok else 'FAIL'}"
               + (f"; worst goodput {worst[1]:.2f}x clean ({worst[0]})"
                  if worst else ""))
+    cap = data.get("capacity")
+    if cap:
+        n_pass = sum(1 for e in cap["sweep"] if e["slo_pass"])
+        print(f"  capacity[{cap['workload']}] {len(cap['sweep'])} configs"
+              f" x {cap['requests']} requests: {n_pass} meet SLO "
+              f"{cap['slo']}; chosen {cap['chosen']}; "
+              f"replay deterministic {cap['deterministic_replay']}")
     sh = data.get("sharding")
     if sh:
         print(f"  sharding[{sh['mode']}] mesh {sh['n_model']}x"

@@ -20,7 +20,20 @@ Checks (all deterministic — this is a CI gate, not a heuristic):
 
 With a second path, additionally require the two files byte-identical
 (the same-seed replay gate — run both serves with REPRO_AUTOTUNE=0 so
-per-process autotune timing cannot pick different kernels).
+per-process autotune timing cannot pick different kernels).  On a
+mismatch the first diverging traceEvent row is printed, so the CI log
+names the seam that went nondeterministic instead of just "differs".
+
+Exit codes, one per failure class (CI scripts can branch on them):
+
+  0  all checks passed
+  2  usage error
+  3  schema violation (format / missing fields / unknown seam / pids)
+  4  tick-derivation violation (ts not a tick multiple, args.tick echo)
+  5  replay mismatch (two inputs not byte-identical)
+
+When multiple classes fail, the smallest (most fundamental) code wins:
+schema beats ticks beats replay.
 """
 from __future__ import annotations
 
@@ -33,14 +46,22 @@ from repro.obs.trace import EVENT_NAMES, TICK_US  # noqa: E402
 
 KNOWN = set(EVENT_NAMES)
 
+EXIT_OK = 0
+EXIT_USAGE = 2
+EXIT_SCHEMA = 3
+EXIT_TICKS = 4
+EXIT_REPLAY = 5
 
-def validate(path: str, log=print) -> bool:
+
+def validate(path: str, log=print):
+    """-> set of failed classes, subset of {"schema", "ticks"}; empty
+    means the file passed."""
     with open(path) as f:
         doc = json.load(f)
-    errs = []
+    errs = []             # (class, message)
     if not isinstance(doc, dict) or "traceEvents" not in doc:
         log(f"  {path}: not object-format trace_event JSON")
-        return False
+        return {"schema"}
     evs = doc["traceEvents"]
     procs, threads = set(), set()
     names = set()
@@ -53,68 +74,110 @@ def validate(path: str, log=print) -> bool:
             elif ev.get("name") == "thread_name":
                 threads.add((ev.get("pid"), ev.get("tid")))
             else:
-                errs.append(f"event {i}: unknown metadata {ev.get('name')}")
+                errs.append(("schema",
+                             f"event {i}: unknown metadata {ev.get('name')}"))
             continue
         if ph not in ("X", "i"):
-            errs.append(f"event {i}: unknown phase {ph!r}")
+            errs.append(("schema", f"event {i}: unknown phase {ph!r}"))
             continue
         for field in ("name", "pid", "tid", "ts", "args"):
             if field not in ev:
-                errs.append(f"event {i} ({ev.get('name')}): missing "
-                            f"{field}")
+                errs.append(("schema", f"event {i} ({ev.get('name')}): "
+                             f"missing {field}"))
         if ev.get("name") not in KNOWN:
-            errs.append(f"event {i}: unknown seam {ev.get('name')!r}")
+            errs.append(("schema",
+                         f"event {i}: unknown seam {ev.get('name')!r}"))
         names.add(ev.get("name"))
         ts = ev.get("ts", -1)
         if ts < 0 or ts % TICK_US != 0:
-            errs.append(f"event {i} ({ev.get('name')}): ts {ts} is not a "
-                        f"non-negative multiple of TICK_US={TICK_US}")
+            errs.append(("ticks", f"event {i} ({ev.get('name')}): ts {ts} "
+                         f"is not a non-negative multiple of "
+                         f"TICK_US={TICK_US}"))
         if ev.get("args", {}).get("tick") != ts // TICK_US:
-            errs.append(f"event {i} ({ev.get('name')}): args.tick "
-                        f"{ev.get('args', {}).get('tick')} != ts/TICK_US")
+            errs.append(("ticks", f"event {i} ({ev.get('name')}): "
+                         f"args.tick {ev.get('args', {}).get('tick')} != "
+                         "ts/TICK_US"))
         if ph == "X":
             n_spans += 1
             if ev.get("dur", 0) <= 0:
-                errs.append(f"event {i}: span without positive dur")
+                errs.append(("schema",
+                             f"event {i}: span without positive dur"))
         else:
             n_instants += 1
             if ev.get("s") != "t":
-                errs.append(f"event {i}: instant without thread scope")
+                errs.append(("schema",
+                             f"event {i}: instant without thread scope"))
         if ev.get("pid") not in procs:
-            errs.append(f"event {i}: pid {ev.get('pid')} has no "
-                        "process_name metadata")
+            errs.append(("schema", f"event {i}: pid {ev.get('pid')} has "
+                         "no process_name metadata"))
         if ev.get("tid") and (ev.get("pid"), ev.get("tid")) not in threads:
-            errs.append(f"event {i}: tid {ev.get('tid')} has no "
-                        "thread_name metadata")
+            errs.append(("schema", f"event {i}: tid {ev.get('tid')} has "
+                         "no thread_name metadata"))
     if n_spans == 0:
-        errs.append("no step spans — the serving loop did not trace")
+        errs.append(("schema",
+                     "no step spans — the serving loop did not trace"))
     if not names & {"req.submit", "req.first_token", "req.finish"}:
-        errs.append("no request-lifecycle events")
-    for e in errs[:20]:
+        errs.append(("schema", "no request-lifecycle events"))
+    for _, e in errs[:20]:
         log(f"  {path}: {e}")
     if not errs:
         log(f"  {path}: {len(evs)} events ({n_spans} spans, "
             f"{n_instants} instants, {len(procs)} roles, "
             f"{sorted(names)}) OK")
-    return not errs
+    return {cls for cls, _ in errs}
+
+
+def first_divergence(path_a: str, path_b: str, log=print) -> None:
+    """Name the first traceEvent row where two parsed traces differ —
+    the diagnostic for a replay-mismatch failure."""
+    try:
+        with open(path_a) as f:
+            a = json.load(f).get("traceEvents", [])
+        with open(path_b) as f:
+            b = json.load(f).get("traceEvents", [])
+    except (json.JSONDecodeError, AttributeError):
+        log("  (unparseable input; cannot locate diverging event)")
+        return
+    for i, (ea, eb) in enumerate(zip(a, b)):
+        if ea != eb:
+            log(f"  first diverging event: index {i}")
+            log(f"    {path_a}: {json.dumps(ea, sort_keys=True)}")
+            log(f"    {path_b}: {json.dumps(eb, sort_keys=True)}")
+            return
+    if len(a) != len(b):
+        n = min(len(a), len(b))
+        longer, path = (a, path_a) if len(a) > len(b) else (b, path_b)
+        log(f"  event counts differ: {len(a)} vs {len(b)}; first extra "
+            f"event (index {n}) in {path}:")
+        log(f"    {json.dumps(longer[n], sort_keys=True)}")
+        return
+    log("  traceEvents parse equal — divergence is formatting/metadata "
+        "only (whitespace, key order, or displayTimeUnit)")
 
 
 def main() -> int:
     if len(sys.argv) not in (2, 3):
         print(__doc__)
-        return 2
-    ok = validate(sys.argv[1])
+        return EXIT_USAGE
+    failed = validate(sys.argv[1])
     if len(sys.argv) == 3:
-        ok &= validate(sys.argv[2])
+        failed |= validate(sys.argv[2])
         with open(sys.argv[1], "rb") as a, open(sys.argv[2], "rb") as b:
             if a.read() != b.read():
                 print(f"  REPLAY DIVERGED: {sys.argv[1]} != {sys.argv[2]} "
                       "(same-seed traces must be byte-identical)")
-                ok = False
+                first_divergence(sys.argv[1], sys.argv[2])
+                failed.add("replay")
             else:
                 print("  replay byte-identical OK")
-    print("PASS" if ok else "FAIL")
-    return 0 if ok else 1
+    print("PASS" if not failed else "FAIL " + "+".join(sorted(failed)))
+    if "schema" in failed:
+        return EXIT_SCHEMA
+    if "ticks" in failed:
+        return EXIT_TICKS
+    if "replay" in failed:
+        return EXIT_REPLAY
+    return EXIT_OK
 
 
 if __name__ == "__main__":

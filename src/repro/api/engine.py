@@ -26,6 +26,19 @@ from repro.api.session import Request, Result, Session
 from repro.api.spec import CompressionSpec, FCProblem
 from repro.configs.base import ArchConfig
 
+#: the declared SLO the `capacity` BENCH section gates against —
+#: scheduler-tick units (deterministic), calibrated so the burst preset
+#: separates under-provisioned from adequate configs: 2 slots queues to
+#: ttft_p99≈36 ticks, 4 slots reaches ≈3
+CAPACITY_SLO = "ttft_p99=20,tpot_p99=4,goodput=1.0"
+
+#: the 2-point smoke sweep (capacity.py --smoke and the BENCH section):
+#: an under-provisioned config the SLO rejects and an adequate one
+CAPACITY_SMOKE_SWEEP = (
+    {"slots": 2, "kv_pool_pages": 16, "chunk": 4, "policy": "fifo"},
+    {"slots": 4, "kv_pool_pages": 24, "chunk": 4, "policy": "fifo"},
+)
+
 
 def _spec_modes(spec: CompressionSpec) -> set:
     """Modes a spec actually executes ('skip' leaves leaves dense/raw)."""
@@ -709,6 +722,124 @@ class Engine:
             }
         return out
 
+    def capacity_benchmark(self, workload="burst", n_requests: int = 8,
+                           sweep: Optional[Sequence[dict]] = None,
+                           slo=None, page_size: int = 8,
+                           max_len: int = 64, max_steps: int = 4000,
+                           seed: int = 0) -> dict:
+        """The `"capacity"` section of BENCH_api.json: trace-driven
+        capacity planning (ROADMAP item 4's "how many AIDA-class devices
+        serve N users at p99 < X?" in single-engine form).
+
+        Replays one workload — a preset name or a ``WorkloadSpec``
+        (e.g. ``WorkloadSpec.from_trace`` of a recorded serve) — across
+        a sweep of ``(slots, kv_pool_pages, chunk, policy)`` configs,
+        feeds each run's live trace through ``repro.obs.analyze``, and
+        names the smallest config meeting the declared ``slo``
+        (smallest = first in ascending (slots, kv_pool_pages, chunk,
+        policy) order).
+
+        Everything in the section is tick-denominated and therefore
+        deterministic: no wall-clock numbers, and the chosen config is
+        re-run once to assert its ``TraceReport`` replays
+        byte-identically — both facts gate in CI
+        (benchmarks/check_regression.py)."""
+        import warnings
+
+        from repro import sched as schd
+        from repro.obs import Tracer
+        from repro.obs.analyze import PHASES, SLOSpec, analyze
+        if slo is None:
+            slo = CAPACITY_SLO
+        if isinstance(slo, str):
+            slo = SLOSpec.parse(slo)
+        if isinstance(workload, schd.WorkloadSpec):
+            wl, wl_name = workload, \
+                ("trace" if workload.schedule is not None else "spec")
+        else:
+            wl_name = workload
+            wl = schd.WorkloadSpec.preset(
+                workload, n_requests=n_requests,
+                vocab=self.cfg.vocab if self.cfg else 256, seed=seed)
+        arrivals = schd.generate(wl)
+        if sweep is None:
+            sweep = [dict(c) for c in CAPACITY_SMOKE_SWEEP]
+
+        def norm(c: dict) -> dict:
+            return {"slots": int(c.get("slots", 4)),
+                    "kv_pool_pages": c.get("kv_pool_pages"),
+                    "chunk": int(c.get("chunk", 8)),
+                    "policy": c.get("policy", "fifo")}
+
+        def key(c: dict):
+            # "smallest config": fewest slots, then smallest pool
+            # (None = the session default pool, largest), then chunk,
+            # then policy name — a total deterministic order
+            pool = c["kv_pool_pages"]
+            return (c["slots"], pool if pool is not None else 10 ** 9,
+                    c["chunk"], c["policy"])
+
+        def label(c: dict) -> str:
+            return (f"slots={c['slots']},pages={c['kv_pool_pages']},"
+                    f"chunk={c['chunk']},policy={c['policy']}")
+
+        def run(c: dict):
+            tracer = Tracer()
+            sess = self.session(
+                batch_slots=c["slots"], max_len=max_len,
+                kv_cache="paged", page_size=page_size,
+                kv_pool_pages=c["kv_pool_pages"],
+                scheduler={"chunk": c["chunk"], "policy": c["policy"]},
+                obs=tracer)
+            replay = [(t, Request(prompt=list(r.prompt),
+                                  max_new=r.max_new, rid=r.rid))
+                      for t, r in arrivals]
+            with warnings.catch_warnings():
+                # an under-provisioned sweep point SHOULD fail its SLO,
+                # not crash or warn-spam: partial completion is data here
+                warnings.simplefilter("ignore")
+                sess.run_workload(replay, max_steps=max_steps,
+                                  on_incomplete="warn")
+            return analyze(tracer, slo=slo)
+
+        configs = sorted((norm(c) for c in sweep), key=key)
+        out = {"workload": wl_name, "requests": wl.n_requests,
+               "seed": seed, "page_size": page_size,
+               "slo": slo.describe(),
+               "order": "ascending (slots, kv_pool_pages, chunk, policy)",
+               "sweep": [], "chosen": None}
+        reports = {}
+        for c in configs:
+            rep = run(c)
+            lbl = label(c)
+            reports[lbl] = (c, rep)
+            n_req = len(rep.requests)
+            completed = sum(1 for r in rep.requests.values()
+                            if r["outcome"] == "completed")
+            out["sweep"].append({
+                "config": c, "label": lbl,
+                "slo_pass": rep.slo["pass"],
+                "metrics": rep.slo["metrics"],
+                "requests": n_req, "completed": completed,
+                "span_ticks": rep.ticks["span"],
+                "critical_path_ticks": {
+                    p: rep.critical_path[p]["ticks"] for p in PHASES},
+                "segments_ok": rep.segments_consistent(),
+            })
+            if out["chosen"] is None and rep.slo["pass"]:
+                out["chosen"] = lbl
+        # replay gate: the named config's report must be a pure function
+        # of the (workload, config) — rerun it and diff the bytes
+        probe = out["chosen"] or (out["sweep"][0]["label"]
+                                  if out["sweep"] else None)
+        if probe is not None:
+            c, rep = reports[probe]
+            out["deterministic_replay"] = \
+                run(c).to_json() == rep.to_json()
+        else:
+            out["deterministic_replay"] = False
+        return out
+
     def benchmark(self, modes: Sequence[str] = ("dense", "aida"),
                   requests: int = 4, max_new: int = 8,
                   batch_slots: int = 2, density: float = 0.25,
@@ -792,6 +923,13 @@ class Engine:
                 # counters — also CI-gated
                 out["resil"] = self.resil_benchmark(mode=kv_mode,
                                                     density=density)
+                # capacity section: the burst preset swept over
+                # (slots, pool, chunk, policy), each run's trace fed
+                # through obs.analyze, smallest SLO-meeting config named
+                # — tick-denominated, fully deterministic, CI-gated.
+                # Ticks depend only on scheduling, not kernels, so the
+                # dense engine (self) is the cheap honest substrate.
+                out["capacity"] = self.capacity_benchmark()
         if problem is None:
             rng = np.random.default_rng(0)
             w = rng.integers(-15, 16, size=(24, 32)) \

@@ -159,7 +159,26 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the run's metrics + resil + role summary "
                          "as machine-readable JSON (with provenance)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write a repro.obs.analyze TraceReport of this "
+                         "serve: per-request critical paths, queueing "
+                         "split, per-role utilization, page pressure; "
+                         "tick-denominated, so two same-seed runs "
+                         "produce byte-identical reports")
+    ap.add_argument("--slo", default=None, metavar="SPEC",
+                    help="evaluate the run against an SLO, e.g. "
+                         "'ttft_p99=40,tpot_p99=4,goodput=0.95' "
+                         "(scheduler-tick units); verdict is printed "
+                         "and embedded in --report")
     args = ap.parse_args()
+
+    slo = None
+    if args.slo is not None:
+        from repro.obs import SLOSpec
+        try:
+            slo = SLOSpec.parse(args.slo)
+        except ValueError as e:
+            ap.error(str(e))
 
     resil = None
     if (args.fault_plan is not None or args.deadline_ticks is not None
@@ -225,18 +244,30 @@ def main():
                   "prefill_devices": args.prefill_devices,
                   "decode_devices": args.decode_devices}
     tracer = None
-    if args.trace is not None or args.trace_ring is not None:
+    # trace analysis (--report / --slo) runs over the same tick-clock
+    # event stream the --trace export writes, so any of the four flags
+    # turns the tracer on; capture stays off for a pure flight-recorder
+    # ring (--trace-ring alone), which only needs the bounded buffer
+    need_capture = (args.trace is not None or args.report is not None
+                    or slo is not None)
+    if need_capture or args.trace_ring is not None:
         from repro.obs import FlightRecorder, Tracer
         recorder = None
         if args.trace_ring is not None:
             if args.trace_ring < 1:
                 ap.error("--trace-ring must be >= 1")
-            out_dir = (os.path.dirname(os.path.abspath(args.trace))
-                       if args.trace is not None else ".")
+            # dump destination, most explicit wins: --profile-dir (the
+            # run's artifact dir) > the --trace file's dir > cwd
+            if args.profile_dir is not None:
+                out_dir = args.profile_dir
+                os.makedirs(out_dir, exist_ok=True)
+            elif args.trace is not None:
+                out_dir = os.path.dirname(os.path.abspath(args.trace))
+            else:
+                out_dir = "."
             recorder = FlightRecorder(capacity=args.trace_ring,
                                       out_dir=out_dir)
-        tracer = Tracer(capture=args.trace is not None,
-                        recorder=recorder)
+        tracer = Tracer(capture=need_capture, recorder=recorder)
     sess = eng.session(batch_slots=args.slots, max_len=max_len,
                        kv_cache=args.kv_cache,
                        kv_pool_pages=args.kv_pool_pages,
@@ -316,6 +347,30 @@ def main():
                 f"{k} {v['seconds']:.2f}s/{v['calls']}" for k, v
                 in wall.items())
         print(line)
+    if args.report is not None or slo is not None:
+        from repro.obs import analyze
+        rep = analyze(tracer, slo=slo)
+        shares = ", ".join(
+            f"{ph} {rec['share']:.0%}" for ph, rec
+            in rep.critical_path.items() if rec["ticks"])
+        print(f"[serve] critical path ({rep.ticks['span']} ticks): "
+              + (shares or "idle"))
+        if not rep.segments_consistent():
+            print("[serve] WARNING: per-request segments do not sum to "
+                  "request spans — trace is incomplete or corrupt")
+        if rep.slo is not None:
+            verdict = "PASS" if rep.slo["pass"] else "FAIL"
+            print(f"[serve] slo {verdict}: " + ", ".join(
+                f"{name} {rec['value']} vs {rec['bound']} "
+                f"({'ok' if rec['pass'] else 'VIOLATED'})"
+                for name, rec in sorted(rep.slo["metrics"].items())))
+            for name, rec in sorted(rep.slo["metrics"].items()):
+                if rec["violators"]:
+                    print(f"[serve]   {name} violators: rids "
+                          f"{rec['violators']}")
+        if args.report is not None:
+            rep.write(args.report)
+            print(f"[serve] report: trace analysis -> {args.report}")
     if args.profile_dir is not None:
         print(f"[serve] profile: jax trace -> {args.profile_dir}")
     if args.json is not None:

@@ -12,9 +12,15 @@ Three layers, one package:
   to disk automatically on ``HealthError`` / ``RequestFailed`` /
   ``OutOfPages``.
 
+* **analyze** — trace analytics: fold the event stream (live or an
+  exported file) into a :class:`TraceReport` — per-request critical
+  path, queueing split, role utilization, page-pool pressure — and
+  score it against a declarative :class:`SLOSpec`.
+
 Plus :func:`timeit` (the one best-of-N wall timer) and
 :func:`profile_trace` (optional ``jax.profiler`` hook).
 """
+from repro.obs.analyze import SLOSpec, TraceReport, analyze, load_trace
 from repro.obs.recorder import FlightRecorder
 from repro.obs.registry import (Counter, Gauge, Histogram, Registry,
                                 percentile, provenance)
@@ -26,4 +32,5 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "percentile",
     "provenance", "FlightRecorder", "timeit", "NULL", "NullTracer",
     "Tracer", "WallTimers", "profile_trace",
+    "SLOSpec", "TraceReport", "analyze", "load_trace",
 ]

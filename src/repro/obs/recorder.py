@@ -35,12 +35,22 @@ class FlightRecorder:
         self.total += 1
 
     def dump(self, reason: str, context: Optional[dict] = None) -> str:
-        """Write the current ring + failure context; returns the path."""
+        """Write the current ring + failure context; returns the path.
+
+        Never overwrites: two recorders sharing an ``out_dir`` (e.g. the
+        prefill and decode roles of a disaggregated serve dying on the
+        same tick) each keep their own ``_seq``, so the sequence number
+        alone cannot dedupe — advance past any path already on disk.
+        """
         os.makedirs(self.out_dir, exist_ok=True)
         safe = "".join(c if c.isalnum() or c in "-_" else "_"
                        for c in reason)[:48]
-        path = os.path.join(self.out_dir, f"flight_{self._seq:03d}_{safe}.json")
-        self._seq += 1
+        while True:
+            path = os.path.join(self.out_dir,
+                                f"flight_{self._seq:03d}_{safe}.json")
+            self._seq += 1
+            if not os.path.exists(path):
+                break
         payload = {
             "reason": reason,
             "context": context or {},

@@ -43,8 +43,8 @@ from repro.obs.registry import percentile as percentile  # re-export
 #: appear only when their record family is present.
 SUMMARY_KEYS = (
     "requests", "completed", "tokens", "seconds", "steps", "tok_per_s",
-    "goodput_req_per_s", "ttft_s", "ttft_sched", "tpot_s",
-    "first_token_calls", "preemptions", "prefix_pages_reused",
+    "goodput_req_per_s", "ttft_s", "ttft_sched", "queue_wait_sched",
+    "tpot_s", "first_token_calls", "preemptions", "prefix_pages_reused",
 )
 SUMMARY_KEYS_CONDITIONAL = ("outcomes", "resil", "handoff", "roles")
 
@@ -137,6 +137,7 @@ def summarize(records: Sequence[Dict], span_seconds: float,
     first_calls = reg.histogram("first_token_calls")
     ttft_tick = reg.histogram("ttft_ticks")
     ttft_step = reg.histogram("ttft_steps")
+    queue_wait = reg.histogram("queue_wait_sched")
     for r in records:
         requests.inc()
         preempts.inc(r.get("preemptions", 0))
@@ -153,6 +154,15 @@ def summarize(records: Sequence[Dict], span_seconds: float,
         if r.get("first_token_tick") is not None \
                 and r.get("submit_tick") is not None:
             ttft_tick.observe(r["first_token_tick"] - r["submit_tick"])
+        # queueing delay split from service time, in the scheduling
+        # clock: the wait between submit and first slot admission is
+        # pure queueing (admission back-pressure), deterministic for a
+        # given workload — obs.analyze derives the full split (incl.
+        # preemption re-queueing) from the trace; this is the cheap
+        # always-on record-level view
+        if r.get("admit_step") is not None \
+                and r.get("submit_step") is not None:
+            queue_wait.observe(r["admit_step"] - r["submit_step"])
         if r.get("finish_time") is None:
             continue
         completed.inc()
@@ -175,6 +185,7 @@ def summarize(records: Sequence[Dict], span_seconds: float,
         "goodput_req_per_s": _rate(completed.value, span_seconds, 3),
         "ttft_s": ttft.summary(),
         "ttft_sched": ttft_sched.summary(),
+        "queue_wait_sched": queue_wait.summary(),
         "tpot_s": tpot.summary(),
         "first_token_calls": first_calls.summary(),
         "preemptions": preempts.value,

@@ -11,6 +11,15 @@ replay byte-identical request schedules.
 Arrivals are expressed in decode STEPS, not wall seconds — the serving
 loop is step-quantized, so step offsets make schedules deterministic
 across hosts of different speed.
+
+Trace record/replay: any serve captured with ``--trace`` (repro.obs) is
+itself a workload — :meth:`WorkloadSpec.from_trace` reconstructs the
+exact ``(arrival_tick, prompt_len, max_new)`` stream from the trace's
+``req.submit`` events into an explicit ``schedule``, which
+:func:`generate` replays verbatim (prompt token *values* are
+regenerated from the seed; admission, paging, and batching depend only
+on lengths and arrival ticks, so the replayed schedule is
+scheduling-identical).
 """
 from __future__ import annotations
 
@@ -36,6 +45,10 @@ class WorkloadSpec:
     vocab: int = 256
     temperature: float = 0.0
     seed: int = 0
+    #: explicit (arrival_step, prompt_len, max_new) schedule — replayed
+    #: verbatim by generate(), overriding the arrival process and the
+    #: prompt_len/max_new ranges (trace record/replay)
+    schedule: Optional[Tuple[Tuple[int, int, int], ...]] = None
 
     @classmethod
     def preset(cls, name: str, **overrides) -> "WorkloadSpec":
@@ -55,12 +68,57 @@ class WorkloadSpec:
         kw.update(overrides)
         return cls(**kw)
 
+    @classmethod
+    def from_trace(cls, trace, *, vocab: int = 256,
+                   temperature: float = 0.0, seed: int = 0,
+                   include_warmup: bool = False) -> "WorkloadSpec":
+        """Reconstruct the request stream a traced serve actually saw.
+
+        ``trace``: a live ``repro.obs.Tracer``, an exported Chrome trace
+        path, a parsed Chrome doc, or a raw event list.  Each
+        ``req.submit`` event contributes one ``(arrival_tick,
+        prompt_len, max_new)`` schedule entry, in submission order with
+        the original ticks preserved — replaying the spec through
+        ``run_workload`` reproduces the exact admission pressure of the
+        recorded run.  Warm-up requests (rid < 0) are dropped unless
+        ``include_warmup``.  Prompt token values are regenerated from
+        ``seed`` (the trace records lengths, not tokens; scheduling
+        depends only on lengths)."""
+        from repro.obs.analyze import coerce_events
+        subs = [(ev["tick"], ev["args"]["prompt_len"],
+                 ev["args"]["max_new"], ev["args"].get("rid"))
+                for ev in coerce_events(trace)
+                if ev["name"] == "req.submit"]
+        if not include_warmup:
+            subs = [s for s in subs if s[3] is None or s[3] >= 0]
+        if not subs:
+            raise ValueError("trace has no req.submit events to replay")
+        schedule = tuple((int(t), int(p), int(m)) for t, p, m, _ in subs)
+        return cls(n_requests=len(schedule),
+                   prompt_len=(min(p for _, p, _ in schedule),
+                               max(p for _, p, _ in schedule)),
+                   max_new=(min(m for _, _, m in schedule),
+                            max(m for _, _, m in schedule)),
+                   arrival="trace", vocab=vocab,
+                   temperature=temperature, seed=seed,
+                   schedule=schedule)
+
 
 def generate(spec: WorkloadSpec) -> List[Tuple[int, "object"]]:
     """-> [(arrival_step, Request)], sorted by arrival step, rids 0..n-1
-    in arrival order."""
+    in arrival order.  An explicit ``spec.schedule`` (trace replay) is
+    honored verbatim — same ticks, same lengths, seeded token values."""
     from repro.api.session import Request
     rng = np.random.default_rng(spec.seed)
+    if spec.schedule is not None:
+        out = []
+        for rid, (step, plen, mnew) in enumerate(spec.schedule):
+            prompt = [int(x) for x in rng.integers(1, spec.vocab,
+                                                   int(plen))]
+            out.append((int(step),
+                        Request(prompt=prompt, max_new=int(mnew),
+                                temperature=spec.temperature, rid=rid)))
+        return out
     lo_p, hi_p = spec.prompt_len
     lo_n, hi_n = spec.max_new
     shared = list(rng.integers(1, spec.vocab, spec.shared_prefix_len)) \

@@ -315,15 +315,23 @@ def test_serve_cli_trace_and_json(tmp_path):
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     trace = tmp_path / "trace.json"
     mjson = tmp_path / "metrics.json"
+    report = tmp_path / "report.json"
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve", "--arch",
          "llama3-8b", "--requests", "3", "--max-new", "4",
          "--trace", str(trace), "--trace-ring", "32",
-         "--json", str(mjson)],
+         "--json", str(mjson), "--report", str(report),
+         "--slo", "ttft_p99=40,goodput=1.0"],
         env=dict(os.environ, PYTHONPATH=src, REPRO_AUTOTUNE="0"),
         capture_output=True, text=True, timeout=1200)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "trace:" in out.stdout and "json:" in out.stdout
+    assert "critical path" in out.stdout and "slo PASS" in out.stdout
+    rep = json.loads(report.read_text())
+    assert rep["schema"] == "repro.obs.analyze/v1"
+    assert rep["slo"]["pass"] is True
+    assert all(sum(r["segments"].values()) == r["span"]
+               for r in rep["requests"].values())
     doc = json.loads(trace.read_text())
     assert doc["traceEvents"]
     names = {e["name"] for e in doc["traceEvents"]}

@@ -1,0 +1,346 @@
+"""repro.obs.analyze: trace analytics, SLO gating, capacity planning.
+
+Hand-built synthetic traces with known answers pin the critical-path
+state machine (single request, preempted+retried, disagg handoff with
+an injected drop); real same-seed serves pin the golden byte-identity
+property (two runs -> byte-identical TraceReport JSON, and a Chrome
+export round-trips to the same report).  Also: SLOSpec parsing and
+violator naming, ``WorkloadSpec.from_trace`` record/replay, the
+flight-recorder dump-collision fix, ``benchmarks/validate_trace.py``
+exit codes per failure class, and ``Engine.capacity_benchmark``
+deterministically naming the smallest SLO-meeting config.
+"""
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro import obs
+from repro import sched as schd
+from repro.api.session import Session
+from repro.configs import get, reduced
+from repro.models import model as M
+from repro.obs.analyze import SLOSpec, TraceReport, analyze
+
+CFG = reduced(get("llama3-8b"), n_layers=2, d_model=64, d_ff=128,
+              vocab=256)
+PS = 4
+ML = 48
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def burst_arrivals(n=5, seed=0):
+    wl = schd.WorkloadSpec.preset("burst", n_requests=n, vocab=CFG.vocab,
+                                  seed=seed)
+    return schd.generate(wl)
+
+
+def replay(arrivals):
+    return [(t, dataclasses.replace(r)) for t, r in arrivals]
+
+
+def ev(name, tick, role="engine", slot=None, **args):
+    """A tracer-internal event dict (what a live Tracer holds)."""
+    return {"name": name, "ph": "i", "tick": tick, "role": role,
+            "slot": slot, "args": args}
+
+
+def traced_session(params, **kw):
+    t = obs.Tracer()
+    sess = Session(CFG, params, batch_slots=2, max_len=ML, page_size=PS,
+                   scheduler={"chunk": 4}, obs=t, **kw)
+    return sess, t
+
+
+# ------------------------------------------ synthetic known-answer traces
+def test_single_request_critical_path():
+    events = [
+        ev("req.submit", 0, rid=0, prompt_len=4, max_new=3),
+        ev("sched.admit", 1, slot=0, rid=0, resumed=0),
+        ev("req.first_token", 3, rid=0, slot=0),
+        ev("req.finish", 6, rid=0, slot=0, tokens=3),
+    ]
+    rep = analyze(events)
+    r = rep.requests["0"]
+    assert r["segments"] == {"queue": 1, "prefill": 2, "handoff": 0,
+                             "decode": 3}
+    assert r["span"] == 6 and r["outcome"] == "completed"
+    assert r["ttft_sched"] == 3
+    assert r["tpot_ticks"] == 1.5            # (6-3)/(3-1)
+    assert rep.segments_consistent()
+    assert rep.critical_path["decode"]["ticks"] == 3
+    assert rep.critical_path["decode"]["share"] == 0.5
+
+
+def test_preempted_request_detours_attributed():
+    events = [
+        ev("req.submit", 0, rid=0, prompt_len=4, max_new=3),
+        ev("sched.admit", 0, slot=0, rid=0, resumed=0),
+        ev("req.first_token", 2, rid=0, slot=0),
+        ev("sched.preempt", 3, slot=0, rid=0, generated=1),
+        ev("sched.admit", 5, slot=1, rid=0, resumed=1),
+        ev("req.finish", 8, rid=0, slot=1, tokens=3),
+    ]
+    rep = analyze(events)
+    r = rep.requests["0"]
+    # preempt sends it back to queue; re-admission restarts prefill
+    assert r["segments"] == {"queue": 2, "prefill": 5, "handoff": 0,
+                             "decode": 1}
+    assert r["span"] == 8
+    assert r["detours"] == {"preemptions": 1, "readmissions": 1}
+    assert rep.segments_consistent()
+
+
+def test_disagg_handoff_with_drop():
+    events = [
+        ev("req.submit", 0, role="prefill", rid=0, prompt_len=6,
+           max_new=4),
+        ev("sched.admit", 1, role="prefill", slot=0, rid=0, resumed=0),
+        ev("req.first_token", 4, role="prefill", rid=0, slot=0),
+        ev("handoff.enqueue", 4, role="prefill", rid=0, pages=2,
+           drops=1, ready_tick=5, backlog=1),
+        ev("handoff.deliver", 7, role="decode", slot=0, rid=0, waited=2,
+           drops=1),
+        ev("req.finish", 10, role="decode", rid=0, slot=0, tokens=4),
+    ]
+    rep = analyze(events)
+    r = rep.requests["0"]
+    assert r["segments"] == {"queue": 1, "prefill": 3, "handoff": 3,
+                             "decode": 3}
+    assert r["span"] == 10
+    assert r["detours"] == {"handoff_drops": 1}
+    assert rep.segments_consistent()
+    assert rep.critical_path["handoff"]["ticks"] == 3
+
+
+def test_unfinished_request_accumulates_to_trace_end():
+    events = [
+        ev("req.submit", 0, rid=0, prompt_len=4, max_new=8),
+        ev("sched.admit", 2, slot=0, rid=0, resumed=0),
+        ev("step.decode", 6, active=1, step=6),    # stretches trace end
+    ]
+    rep = analyze(events)
+    r = rep.requests["0"]
+    assert r["outcome"] == "unfinished"
+    assert r["segments"]["queue"] == 2 and r["segments"]["prefill"] == 4
+    assert r["span"] == 6
+    assert rep.segments_consistent()
+
+
+def test_failed_request_terminal():
+    events = [
+        ev("req.submit", 0, rid=0, prompt_len=4, max_new=8),
+        ev("sched.admit", 1, slot=0, rid=0, resumed=0),
+        ev("resil.fail", 5, rid=0, reason="retries_exhausted", retries=2),
+    ]
+    rep = analyze(events)
+    r = rep.requests["0"]
+    assert r["outcome"] == "failed"
+    assert r["failed_reason"] == "retries_exhausted" and r["retries"] == 2
+    assert r["span"] == 5 and rep.segments_consistent()
+    assert rep.detours["failed"] == 1
+
+
+def test_pages_timeline_change_compressed():
+    events = [
+        ev("req.submit", 0, rid=0, prompt_len=4, max_new=2),
+        ev("sched.admit", 0, slot=0, rid=0, resumed=0),
+        ev("alloc.pages", 0, n=2, in_use=2),
+        ev("alloc.pages", 1, n=1, in_use=3),
+        ev("alloc.free", 2, n=0, in_use=3),     # level unchanged: dropped
+        ev("req.first_token", 2, rid=0, slot=0),
+        ev("alloc.free", 3, n=3, in_use=0),
+        ev("req.finish", 3, rid=0, slot=0, tokens=2),
+    ]
+    rep = analyze(events)
+    p = rep.pages["engine"]
+    assert p["timeline"] == [[0, 2], [1, 3], [3, 0]]
+    assert p["peak"] == 3 and p["allocs"] == 3 and p["frees"] == 3
+
+
+# -------------------------------------------------------------- SLOSpec
+def test_slospec_parse_and_aliases():
+    s = SLOSpec.parse("ttft_p99=40,tpot_p99=4,goodput=0.95")
+    assert s == SLOSpec(ttft_p99=40.0, tpot_p99=4.0, goodput=0.95)
+    assert SLOSpec.parse("ttft=10").ttft_p99 == 10.0
+    assert SLOSpec.parse("tpot=2, goodput=1").goodput == 1.0
+    with pytest.raises(ValueError):
+        SLOSpec.parse("latency=4")
+    with pytest.raises(ValueError):
+        SLOSpec.parse("")
+    with pytest.raises(ValueError):
+        SLOSpec.parse("ttft_p99")
+
+
+def test_slospec_names_violators():
+    reqs = {
+        "0": {"ttft_sched": 2, "tpot_ticks": 1.0, "outcome": "completed"},
+        "1": {"ttft_sched": 50, "tpot_ticks": 1.0, "outcome": "completed"},
+        "2": {"ttft_sched": 3, "tpot_ticks": None, "outcome": "failed"},
+    }
+    out = SLOSpec.parse("ttft_p99=10,goodput=1.0").evaluate(reqs)
+    assert not out["pass"]
+    assert out["metrics"]["ttft_p99"]["violators"] == [1]
+    assert out["metrics"]["goodput"]["violators"] == [2]
+    ok = SLOSpec.parse("ttft_p99=99,goodput=0.5").evaluate(reqs)
+    assert ok["pass"] and ok["metrics"]["goodput"]["value"] == 0.6667
+
+
+# ------------------------------------------------- golden byte-identity
+def test_report_byte_identical_across_same_seed_serves(params):
+    outs = []
+    for _ in range(2):
+        sess, t = traced_session(params)
+        sess.run_workload(replay(burst_arrivals(4)))
+        rep = analyze(t, slo="ttft_p99=40,goodput=1.0")
+        assert rep.segments_consistent()
+        assert rep.slo["pass"]
+        outs.append(rep.to_json())
+    assert outs[0] == outs[1]
+    # every request completed and was analyzed
+    rep = analyze(t)
+    assert len(rep.requests) == 4
+    assert all(r["outcome"] == "completed" for r in rep.requests.values())
+
+
+def test_chrome_export_roundtrips_to_same_report(params, tmp_path):
+    sess, t = traced_session(params)
+    sess.run_workload(replay(burst_arrivals(4)))
+    live = analyze(t)
+    path = tmp_path / "trace.json"
+    t.export(str(path))
+    from_file = analyze(str(path))
+    assert live.to_json() == from_file.to_json()
+    # dict (parsed Chrome doc) input too
+    from_doc = analyze(json.loads(path.read_text()))
+    assert live.to_json() == from_doc.to_json()
+
+
+# ------------------------------------------------- trace record/replay
+def test_workload_from_trace_reconstructs_schedule(params):
+    arrivals = burst_arrivals(5)
+    sess, t = traced_session(params)
+    sess.run_workload(replay(arrivals))
+    spec = schd.WorkloadSpec.from_trace(t, vocab=CFG.vocab)
+    assert spec.arrival == "trace" and spec.n_requests == 5
+    want = [(step, len(r.prompt), r.max_new) for step, r in arrivals]
+    assert list(spec.schedule) == want
+    # generate() replays the schedule verbatim with fresh seeded tokens
+    regen = schd.generate(spec)
+    assert [(s, len(r.prompt), r.max_new) for s, r in regen] == want
+    assert [r.rid for _, r in regen] == [0, 1, 2, 3, 4]
+    # and a replayed serve reproduces the recorded scheduling exactly
+    sess2, t2 = traced_session(params)
+    sess2.run_workload(regen)
+    assert analyze(t).to_json() == analyze(t2).to_json()
+
+
+def test_workload_from_trace_empty_raises():
+    with pytest.raises(ValueError):
+        schd.WorkloadSpec.from_trace([ev("step.decode", 0, active=0,
+                                         step=0)])
+
+
+# ------------------------------------------- flight-recorder collisions
+def test_recorder_dump_collision_two_recorders(tmp_path):
+    a = obs.FlightRecorder(capacity=4, out_dir=str(tmp_path))
+    b = obs.FlightRecorder(capacity=4, out_dir=str(tmp_path))
+    a.record(ev("step.decode", 0, active=1, step=0))
+    b.record(ev("step.decode", 0, active=1, step=0))
+    pa = a.dump("OutOfPages")
+    pb = b.dump("OutOfPages")          # same seq + same reason: collides
+    assert pa != pb
+    assert pathlib.Path(pa).exists() and pathlib.Path(pb).exists()
+    assert json.loads(pathlib.Path(pb).read_text())["reason"] == \
+        "OutOfPages"
+    # and a recorder re-dumping advances past its own files
+    pa2 = a.dump("OutOfPages")
+    assert pa2 not in (pa, pb) and pathlib.Path(pa2).exists()
+
+
+# ------------------------------------------- validate_trace exit codes
+@pytest.fixture(scope="module")
+def exported_trace(params, tmp_path_factory):
+    sess, t = traced_session(params)
+    sess.run_workload(replay(burst_arrivals(3)))
+    path = tmp_path_factory.mktemp("vt") / "trace.json"
+    t.export(str(path))
+    return path
+
+
+def run_validate(*paths):
+    r = subprocess.run(
+        [sys.executable, "benchmarks/validate_trace.py"]
+        + [str(p) for p in paths],
+        cwd=REPO, capture_output=True, text=True)
+    return r.returncode, r.stdout
+
+
+def test_validate_trace_ok_and_usage(exported_trace):
+    code, _ = run_validate(exported_trace)
+    assert code == 0
+    code, _ = run_validate()
+    assert code == 2
+
+
+def test_validate_trace_schema_exit_code(exported_trace, tmp_path):
+    doc = json.loads(exported_trace.read_text())
+    for e in doc["traceEvents"]:
+        if e.get("ph") != "M":
+            e["name"] = "bogus.seam"
+            break
+    bad = tmp_path / "bad_schema.json"
+    bad.write_text(json.dumps(doc))
+    code, out = run_validate(bad)
+    assert code == 3 and "unknown seam" in out
+
+
+def test_validate_trace_tick_exit_code(exported_trace, tmp_path):
+    doc = json.loads(exported_trace.read_text())
+    for e in doc["traceEvents"]:
+        if e.get("ph") != "M":
+            e["ts"] += 7
+            break
+    bad = tmp_path / "bad_ticks.json"
+    bad.write_text(json.dumps(doc))
+    code, out = run_validate(bad)
+    assert code == 4 and "TICK_US" in out
+
+
+def test_validate_trace_replay_exit_code(exported_trace, tmp_path):
+    doc = json.loads(exported_trace.read_text())
+    for e in doc["traceEvents"]:
+        if e.get("name") == "req.finish":
+            e["args"]["tokens"] += 1
+            break
+    bad = tmp_path / "bad_replay.json"
+    bad.write_text(json.dumps(doc))
+    code, out = run_validate(exported_trace, bad)
+    assert code == 5
+    assert "first diverging event" in out and "req.finish" in out
+
+
+# --------------------------------------------------- capacity planning
+def test_capacity_benchmark_names_smallest_passing_config():
+    from repro.api.engine import CAPACITY_SLO, Engine
+    eng = Engine(CFG)
+    section = eng.capacity_benchmark()      # burst n=8, 2-point smoke
+    labels = [e["label"] for e in section["sweep"]]
+    assert labels == ["slots=2,pages=16,chunk=4,policy=fifo",
+                      "slots=4,pages=24,chunk=4,policy=fifo"]
+    # calibrated: the 2-slot point misses the TTFT bound, 4 slots meets it
+    assert [e["slo_pass"] for e in section["sweep"]] == [False, True]
+    assert section["chosen"] == "slots=4,pages=24,chunk=4,policy=fifo"
+    assert section["deterministic_replay"] is True
+    assert all(e["segments_ok"] for e in section["sweep"])
+    assert section["slo"] == SLOSpec.parse(CAPACITY_SLO).describe()
+    json.dumps(section)                     # BENCH-section serializable
