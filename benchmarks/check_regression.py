@@ -357,6 +357,29 @@ def check_serving(new: dict, base: dict, tol: float, log=print) -> bool:
         log(f"  serving chunked prefill ({calls} calls) no better than "
             f"one-token ({one})")
         ok = False
+    # prefill latency: dual-unit gate like the throughput one — absolute
+    # chunked TTFT within tol of baseline, OR the chunked/one-token TTFT
+    # ratio no worse.  The ratio is the host-speed-invariant unit (both
+    # sides ran in the same process); the absolute arm catches a fast
+    # host masking a kernel regression behind a good ratio.
+    ttft = pf.get("chunked", {}).get("ttft_s")
+    one_ttft = pf.get("one_token", {}).get("ttft_s")
+    bpf = base.get("serving", {}).get("prefill", {})
+    bttft = bpf.get("chunked", {}).get("ttft_s")
+    bone = bpf.get("one_token", {}).get("ttft_s")
+    if ttft is None:
+        log("  serving chunked prefill ttft_s missing")
+        ok = False
+    elif bttft:
+        abs_ok = ttft <= bttft * (1.0 + tol)
+        rel_ok = (one_ttft and bone
+                  and ttft / one_ttft <= (bttft / bone) * (1.0 + tol))
+        if not (abs_ok or rel_ok):
+            log(f"  serving chunked-prefill TTFT REGRESSION "
+                f"{bttft:.4f}s -> {ttft:.4f}s (normalized vs one-token "
+                f"{bttft / bone if bone else 0:.3f} -> "
+                f"{ttft / one_ttft if one_ttft else 0:.3f})")
+            ok = False
     # prefix cache: must hit, must not leak (deterministic)
     px = sv.get("prefix", {})
     if not px.get("page_hits"):

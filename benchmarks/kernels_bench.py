@@ -1,9 +1,17 @@
 """Kernel microbenchmarks: HBM-byte and FLOP accounting for the AIDA
 kernels vs their dense equivalents (the in-memory-compression dividend),
 plus wall-clock on this host (interpret mode — correctness path, NOT TPU
-performance; the byte model is the TPU-relevant number)."""
+performance; the byte model is the TPU-relevant number).
+
+`paged_attention_bench` sweeps the paged-attention space the serving hot
+path dispatches over — (page_size, npp, pb, C) x pallas-vs-xla x
+bf16/int8, decode and chunked-prefill shapes — and `--json` dumps every
+row for the CI artifact, so impl-choice trajectories are inspectable
+per commit alongside the BENCH numbers."""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -72,8 +80,92 @@ def attention_bench(log=print):
     return rows
 
 
+def _filled_paged_pool(rng, B, Hkv, Dh, ps, npp, kv_dtype):
+    from repro import kvstore as kvs
+    pool = kvs.init_pool(1 + B * npp, Hkv, ps, Dh, kv_dtype=kv_dtype)
+    table = jnp.asarray(1 + np.arange(B * npp).reshape(B, npp), jnp.int32)
+    S = ps * npp
+    for t in range(S):
+        pool = kvs.update(
+            pool, table,
+            jnp.asarray(rng.normal(size=(B, Hkv, Dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(B, Hkv, Dh)), jnp.float32),
+            jnp.full((B,), t, jnp.int32))
+    return pool, table, S
+
+
+def paged_attention_bench(log=print, geometries=((8, 4), (16, 8)),
+                          pbs=(1, 2, 4), chunks=(1, 4)):
+    """Paged-attention sweep: (page_size, npp, pb, C) x pallas-vs-xla x
+    bf16/int8 over a fully-populated pool — the serving steady state.
+    C=1 rows are the decode kernel; C>1 rows the chunked-prefill kernel
+    (qt = C query tile).  Interpret-mode wall-clock: trajectory signal
+    for the tuner's impl choice, not TPU performance."""
+    from repro import kvstore as kvs
+    from repro.obs import timeit
+    B, Hkv, G, Dh = 2, 2, 2, 16
+    rows = []
+    for ps, npp in geometries:
+        for kv_dtype in ("bf16", "int8"):
+            rng = np.random.default_rng(0)
+            pool, table, S = _filled_paged_pool(rng, B, Hkv, Dh, ps, npp,
+                                                kv_dtype)
+            win = jnp.int32(-1)
+            for c in chunks:
+                if c == 1:
+                    q = jnp.asarray(
+                        rng.normal(size=(B, Hkv * G, Dh)), jnp.float32)
+                    cur = jnp.full((B,), S - 1, jnp.int32)
+                    runs = [("xla", None, jax.jit(
+                        lambda: kvs.paged_attention_xla(
+                            q, pool, table, cur, win)))]
+                    for pb in pbs:
+                        runs.append(("pallas", pb, (
+                            lambda pb=pb: kvs.paged_attention_pallas(
+                                q, pool, table, cur, win, pb=pb,
+                                interpret=True))))
+                else:
+                    qc = jnp.asarray(
+                        rng.normal(size=(B, Hkv * G, c, Dh)), jnp.float32)
+                    q_pos = jnp.broadcast_to(
+                        jnp.arange(S - c, S, dtype=jnp.int32)[None],
+                        (B, c))
+                    runs = [("xla", None, jax.jit(
+                        lambda: kvs.paged_attention_xla_chunk(
+                            qc, pool, table, q_pos, win)))]
+                    for pb in pbs:
+                        runs.append(("pallas", pb, (
+                            lambda pb=pb: kvs.paged_attention_pallas_chunk(
+                                qc, pool, table, q_pos, win, pb=pb, qt=c,
+                                interpret=True))))
+                for impl, pb, fn in runs:
+                    us = timeit(fn, reps=3, inner=3) * 1e6
+                    row = {"page_size": ps, "npp": npp, "kv_dtype": kv_dtype,
+                           "C": c, "impl": impl, "pb": pb,
+                           "us": round(us, 1)}
+                    rows.append(row)
+                    tag = impl if pb is None else f"{impl}/pb{pb}"
+                    log(f"  paged ps={ps:2d} npp={npp} {kv_dtype:4s} "
+                        f"C={c} {tag:10s} {us:10.0f} us/call")
+    return rows
+
+
 if __name__ == "__main__":
-    bytes_model()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write all rows (bytes/wallclock/attention/paged)"
+                         " to this path for the CI artifact")
+    args = ap.parse_args()
+    bm = bytes_model()
     print("\nwall-clock (host CPU, interpret-mode kernels):")
-    wallclock()
-    attention_bench()
+    wc = wallclock()
+    at = attention_bench()
+    print("\npaged attention (decode + chunked prefill):")
+    pg = paged_attention_bench()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bytes_model": bm,
+                       "wallclock_us": dict(wc),
+                       "attention_us": dict(at),
+                       "paged_attention": pg}, f, indent=1)
+        print(f"\nwrote {args.json}")

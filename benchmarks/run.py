@@ -63,6 +63,7 @@ def serve(mesh=None):
 
 tps1, step1, ref = serve()
 tpsN, stepN, got = serve(make_host_mesh(n_model=4, n_data=2))
+from repro.kernels import tune
 print(json.dumps({
     "mode": "aida", "n_model": 4, "n_data": 2,
     "token_parity": got == ref,
@@ -71,6 +72,10 @@ print(json.dumps({
     "mesh_over_single": round(tpsN / tps1, 4),
     "decode_step_us": round(stepN * 1e6, 1),
     "decode_step_us_per_shard": round(stepN * 1e6 / 4, 1),
+    # paged decode/chunk winners the mesh session resolved at its GLOBAL
+    # geometry keys (shard_map wrappers pass them into every shard)
+    "paged_tiles": {k: v for k, v in tune.snapshot().items()
+                    if k.startswith("paged-attn")},
 }))
 """
 
@@ -173,6 +178,10 @@ def bench_api(out_path: str = "BENCH_api.json") -> dict:
               f"{sh['tok_per_s_single']:.1f} single "
               f"(x{sh['mesh_over_single']:.2f}); decode step "
               f"{sh['decode_step_us_per_shard']:.0f} us/shard")
+        for key, ch in sorted(sh.get("paged_tiles", {}).items()):
+            tiles = {k: v for k, v in ch.items() if k not in ("impl", "us")}
+            print(f"    paged tile {key}: {ch['impl']} {tiles} "
+                  f"({ch.get('us', float('nan')):.0f} us)")
     sim = data["backends"]["cycle-sim"]
     print(f"  ap-emulator FC cycles: "
           f"{data['backends']['ap-emulator']['fc_cycles']}  "

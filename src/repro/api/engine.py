@@ -115,10 +115,10 @@ class Engine:
     # ------------------------------------------------------------- serve
     def _pretune(self, batch_slots: int, max_len: int, page_size: int,
                  kv_dtype: Optional[str], kv_cache: Optional[str],
-                 plan) -> None:
+                 plan, scheduler=None) -> None:
         """Autotune the kernels a session at this batch width will trace:
-        compressed-FC geometries (shard-local under a plan) and — when
-        heads stay whole — the paged-attention impl/tile choice."""
+        compressed-FC geometries (shard-local under a plan) and the
+        paged-attention decode + chunked-prefill impl/tile choices."""
         from repro.kernels import ops, tune
         tp = plan.tp if plan is not None else 1
         if self.backend.name == "pallas" and self.compression is not None:
@@ -136,13 +136,21 @@ class Engine:
                                      ops.pallas_interpret())
         import repro.api.session as sess_mod
         resolved_kv = sess_mod.resolve_kv_cache(kv_cache, self.cfg)
-        # head-sharded (tp>1) sessions force the XLA gather path, so the
-        # paged-attention tuner only matters when heads stay whole
+        # mesh sessions resolve the paged kernels with the GLOBAL
+        # geometry (shard.paged_attention_*_sharded pins the choice
+        # before entering shard_map), so the same global tune applies
+        # whether heads are sharded or whole
         if resolved_kv == "paged" and self.cfg.family != "rwkv6" \
-                and tp == 1 and tune.enabled():
+                and tune.enabled():
+            kvd = kv_dtype or sess_mod.KV_DTYPE_DEFAULT
+            interp = ops.pallas_interpret()
             tune.tune_paged(self.cfg, batch_slots, max_len, page_size,
-                            kv_dtype or sess_mod.KV_DTYPE_DEFAULT,
-                            ops.pallas_interpret())
+                            kvd, interp)
+            from repro import sched as schd
+            chunk = schd.SchedConfig.coerce(scheduler).chunk
+            if chunk > 1 and schd.supports_chunked_prefill(self.cfg):
+                tune.tune_paged_chunk(self.cfg, batch_slots, max_len,
+                                      page_size, chunk, kvd, interp)
 
     def session(self, batch_slots: int = 4, max_len: int = 256,
                 seed: int = 0, kv_cache: Optional[str] = None,
@@ -179,9 +187,11 @@ class Engine:
         autotuned for this batch width *before* the decode step compiles,
         so the jitted step traces against the winning tiles
         (kernels.tune; disable with REPRO_AUTOTUNE=0).  A paged-KV
-        session additionally pre-tunes the paged-attention impl/tile
-        choice for this (geometry, batch, backend); a mesh session tunes
-        the *shard-local* FC geometries its shard_map kernels will run.
+        session additionally pre-tunes the paged-attention decode and
+        chunked-prefill impl/tile choices for this (geometry, batch,
+        chunk, backend) — mesh sessions included, since the shard_map
+        wrappers pin the globally-resolved choice — and a mesh session
+        tunes the *shard-local* FC geometries its shard_map kernels run.
 
         ``resil``: a `repro.resil.ResilConfig` (or dict / ``"preset:seed"``
         fault-plan string) — deterministic fault injection, request
@@ -230,11 +240,12 @@ class Engine:
                 pre_plan = shardmod.make_plan(pre_mesh, self.cfg)
                 dec_plan = shardmod.make_plan(dec_mesh, self.cfg)
             self._pretune(d.prefill_slots, max_len, page_size, kv_dtype,
-                          "paged", pre_plan)
+                          "paged", pre_plan, scheduler=scheduler)
             if d.decode_slots != d.prefill_slots or \
                     dec_plan is not pre_plan:
                 self._pretune(d.decode_slots, max_len, page_size,
-                              kv_dtype, "paged", dec_plan)
+                              kv_dtype, "paged", dec_plan,
+                              scheduler=scheduler)
             return DisaggSession(
                 self.cfg, self.params, disagg=d, max_len=max_len,
                 seed=seed, backend=backend, page_size=page_size,
@@ -246,7 +257,7 @@ class Engine:
             from repro import shard as shardmod
             plan = shardmod.make_plan(mesh, self.cfg)
         self._pretune(batch_slots, max_len, page_size, kv_dtype,
-                      kv_cache, plan)
+                      kv_cache, plan, scheduler=scheduler)
         return Session(self.cfg, self.params, batch_slots=batch_slots,
                        max_len=max_len, seed=seed, backend=backend,
                        kv_cache=kv_cache, page_size=page_size,
@@ -465,11 +476,13 @@ class Engine:
         import math
 
         from repro import sched as schd
+        from repro.kernels import tune
         cfg = self.cfg
         if cfg is None or cfg.family == "rwkv6":
             raise CapabilityError(
                 "serving_benchmark needs a paged-KV arch (rwkv6 is "
                 "attention-free)")
+        seen_tiles = set(tune.snapshot())
         eng = Engine(cfg, params=self.params)
         if mode != "dense":
             eng.compress(CompressionSpec(mode=mode, density=density),
@@ -508,6 +521,12 @@ class Engine:
                 "ttft_s": round(rec["first_token_time"]
                                 - rec["submit_time"], 4)}
         out["prefill"] = pf
+        # paged decode + chunked-prefill winners tuned by these sessions
+        # (Engine.session pre-tunes both) — recorded like the FC tiles so
+        # the serving perf trajectory names the kernels behind it
+        snap = tune.snapshot()
+        out["tiles"] = {k: v for k, v in snap.items()
+                        if k not in seen_tiles}
 
         # --- heterogeneous continuous batching (best-of-3) -------------
         wl = schd.WorkloadSpec.preset(

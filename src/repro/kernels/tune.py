@@ -94,8 +94,23 @@ def lut_key(n: int, k: int, batch: int, interpret: bool) -> Key:
 
 def paged_key(hkv: int, group: int, d_head: int, page_size: int, npp: int,
               batch: int, quantized: bool, interpret: bool) -> Key:
-    return ("paged-attn", hkv, group, d_head, page_size, npp, batch,
-            "q8" if quantized else "bf16", "interp" if interpret else "tpu")
+    # npp is bucketed to the padded table width the kernel actually runs,
+    # so a growing page table hits one cache entry instead of re-tuning
+    # (and recompiling) at every width
+    from repro.kvstore.paged_attention import npp_bucket
+    return ("paged-attn", hkv, group, d_head, page_size, npp_bucket(npp),
+            batch, "q8" if quantized else "bf16",
+            "interp" if interpret else "tpu")
+
+
+def paged_chunk_key(hkv: int, group: int, d_head: int, page_size: int,
+                    npp: int, batch: int, chunk: int, quantized: bool,
+                    interpret: bool) -> Key:
+    from repro.kvstore.paged_attention import npp_bucket
+    return ("paged-attn-chunk", hkv, group, d_head, page_size,
+            npp_bucket(npp), batch, chunk,
+            "q8" if quantized else "bf16",
+            "interp" if interpret else "tpu")
 
 
 # ------------------------------------------------------------- candidates
@@ -127,9 +142,23 @@ def lut_candidates(n: int, k: int) -> List[KernelChoice]:
 def paged_candidates(npp: int) -> List[KernelChoice]:
     """XLA gather reference vs the Pallas kernel at a few page-block
     widths (pb = table slots folded per grid step)."""
+    from repro.kvstore.paged_attention import npp_bucket
     cands = [KernelChoice("xla")]
-    for pb in sorted({min(p, npp) for p in (1, 2, 4)}):
+    for pb in sorted({min(p, npp_bucket(npp)) for p in (1, 2, 4)}):
         cands.append(KernelChoice("pallas", (("pb", pb),)))
+    return cands
+
+
+def paged_chunk_candidates(npp: int, chunk: int) -> List[KernelChoice]:
+    """Chunked-prefill space: XLA gather reference vs the Pallas chunk
+    kernel over (pb page blocks) x (qt query tiles dividing the chunk)."""
+    from repro.kvstore.paged_attention import npp_bucket
+    cands = [KernelChoice("xla")]
+    pbs = sorted({min(p, npp_bucket(npp)) for p in (1, 2, 4)})
+    qts = sorted({q for q in (1, 2, 4, chunk) if chunk % q == 0})
+    for pb in pbs:
+        for qt in qts:
+            cands.append(KernelChoice("pallas", (("pb", pb), ("qt", qt))))
     return cands
 
 
@@ -290,6 +319,59 @@ def tune_paged(cfg, batch: int, max_len: int, page_size: int,
             q, pool, table, cur, win, scale=cfg.attn_scale,
             cap=cfg.attn_softcap, pb=c.tile("pb", 2), interpret=interpret)
     return autotune(key, paged_candidates(npp), run)
+
+
+def tune_paged_chunk(cfg, batch: int, max_len: int, page_size: int,
+                     chunk: int, kv_dtype: str,
+                     interpret: bool) -> Optional[KernelChoice]:
+    """Search the chunked-prefill paged-attention space for one serving
+    geometry: a [batch, H, chunk, Dh] query block over a fully-populated
+    synthetic pool — the steady-state cost of the last prefill chunk of a
+    long prompt."""
+    import jax
+    import jax.numpy as jnp
+    from repro import kvstore as kvsto
+
+    if chunk <= 1:
+        return None
+    hkv, dh = cfg.n_kv, cfg.head_dim
+    group = cfg.n_heads // hkv
+    npp = -(-max_len // page_size)
+    quantized = kv_dtype == "int8"
+    key = paged_chunk_key(hkv, group, dh, page_size, npp, batch, chunk,
+                          interpret=interpret, quantized=quantized)
+    if get(key) is not None:
+        return get(key)
+    rng = np.random.default_rng(0)
+    pool = kvsto.init_pool(1 + batch * npp, hkv, page_size, dh,
+                           kv_dtype=kv_dtype)
+    table = jnp.asarray(
+        1 + np.arange(batch * npp).reshape(batch, npp), jnp.int32)
+    for t in range(max_len):
+        pool = kvsto.update(
+            pool, table,
+            jnp.asarray(rng.normal(size=(batch, hkv, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(batch, hkv, dh)), jnp.float32),
+            jnp.full((batch,), t, jnp.int32))
+    q = jnp.asarray(rng.normal(size=(batch, cfg.n_heads, chunk, dh)),
+                    jnp.float32)
+    # query the trailing chunk of the sequence (the worst-case mask span)
+    q_pos = jnp.broadcast_to(
+        jnp.arange(max_len - chunk, max_len, dtype=jnp.int32)[None, :],
+        (batch, chunk))
+    win = jnp.int32(-1)
+    xla_run = jax.jit(lambda qq, pp, ww: kvsto.paged_attention_xla_chunk(
+        qq, pool, table, pp, ww, scale=cfg.attn_scale,
+        cap=cfg.attn_softcap))
+
+    def run(c):
+        if c.impl == "xla":
+            return xla_run(q, q_pos, win)
+        return kvsto.paged_attention_pallas_chunk(
+            q, pool, table, q_pos, win, scale=cfg.attn_scale,
+            cap=cfg.attn_softcap, pb=c.tile("pb", 2),
+            qt=c.tile("qt", chunk), interpret=interpret)
+    return autotune(key, paged_chunk_candidates(npp, chunk), run)
 
 
 def tune_params(params, batch: int, interpret: bool) -> int:

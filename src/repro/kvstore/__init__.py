@@ -8,21 +8,28 @@ paged_attention.py for the decode kernel, alloc.py for the host-side
 lifecycle, and api/session.py for the continuous-batching integration.
 """
 from repro.kvstore.alloc import OutOfPages, PageAllocator, reclaimable_prefix
-from repro.kvstore.paged_attention import (paged_attention,
+from repro.kvstore.paged_attention import (npp_bucket, paged_attention,
+                                           paged_attention_chunk,
                                            paged_attention_pallas,
+                                           paged_attention_pallas_chunk,
                                            paged_attention_xla,
-                                           paged_attention_xla_chunk)
+                                           paged_attention_xla_chunk,
+                                           resolve_paged,
+                                           resolve_paged_chunk)
 from repro.kvstore.pool import (GARBAGE_PAGE, NO_PAGE, PagedKV,
                                 attention_mask, chunk_attention_mask,
                                 copy_pages, dense_kv_bytes_per_token,
                                 gather_kv, init_pool, init_table,
-                                kv_bytes_per_token, update)
+                                kv_bytes_per_token, update, update_chunk)
 
 __all__ = [
     "GARBAGE_PAGE", "NO_PAGE", "OutOfPages", "PageAllocator", "PagedKV",
     "attention_mask", "chunk_attention_mask", "copy_pages",
     "dense_kv_bytes_per_token",
     "gather_kv", "init_pool", "init_table", "kv_bytes_per_token",
-    "paged_attention", "paged_attention_pallas", "paged_attention_xla",
-    "paged_attention_xla_chunk", "reclaimable_prefix", "update",
+    "npp_bucket", "paged_attention", "paged_attention_chunk",
+    "paged_attention_pallas", "paged_attention_pallas_chunk",
+    "paged_attention_xla", "paged_attention_xla_chunk",
+    "reclaimable_prefix", "resolve_paged", "resolve_paged_chunk",
+    "update", "update_chunk",
 ]

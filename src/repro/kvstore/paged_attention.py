@@ -11,10 +11,21 @@ against their per-page scales in VMEM, and folds them into the running
 (m, l, acc) online-softmax state; the output block is finalized on the
 last page block, exactly like kernels/flash_attention.py.
 
-The XLA path (`impl="xla"`) is the same math as gather + masked softmax —
-the correctness oracle, the autodiff-free reference, and (on
-interpret-mode hosts) usually the faster choice; `paged_attention()`
-dispatches per the kernels.tune cache like the FC ops do.
+Both serving shapes are covered: the decode kernel takes one query per
+sequence (``[B, H, Dh]``) and the chunked-prefill kernel
+(:func:`paged_attention_pallas_chunk`) takes a whole chunk
+(``[B, H, C, Dh]``) at absolute positions ``q_pos`` — same scalar
+prefetch, same inline dequant, with a ``qt``-query tile folded into the
+online-softmax state per grid step and the in-chunk causal mask
+(table-index position vs. per-query absolute position) computed
+in-kernel.  A ``C=1`` chunk is bit-identical to the decode kernel.
+
+The XLA paths (`impl="xla"`) are the same math as gather + masked
+softmax — the correctness oracle, the autodiff-free reference, and (on
+interpret-mode hosts) usually the faster choice; `paged_attention()` and
+`paged_attention_chunk()` dispatch per the kernels.tune cache like the
+FC ops do.  Page tables are padded to an `npp_bucket` multiple of the
+largest tuner `pb` so a growing table reuses one compiled kernel.
 """
 from __future__ import annotations
 
@@ -30,6 +41,17 @@ from repro.kvstore import pool as poolmod
 from repro.kvstore.pool import PagedKV
 
 NEG_INF = -1e30
+
+# Largest page-block candidate the tuner searches.  Page tables are
+# padded (and tune keys bucketed) to the next PB_MAX multiple so a table
+# that grows 17 -> 18 -> ... pages hits one compiled kernel + one tune
+# entry instead of recompiling per npp.
+PB_MAX = 4
+
+
+def npp_bucket(npp: int) -> int:
+    """Round a page-table width up to the next PB_MAX multiple."""
+    return -(-npp // PB_MAX) * PB_MAX
 
 
 def _softcap(s, cap: Optional[float]):
@@ -197,8 +219,9 @@ def paged_attention_pallas(q, pool: PagedKV, table, cur_pos, window, *,
     g = h // hkv
     npp = table.shape[1]
     scale = (dh ** -0.5) if scale is None else scale
-    pb = max(1, min(pb, npp))
-    nblk = -(-npp // pb)
+    npp_b = npp_bucket(npp)   # bucketed width: growing tables reuse one kernel
+    pb = max(1, min(pb, npp_b))
+    nblk = -(-npp_b // pb)
     if nblk * pb != npp:   # pad table; -1 entries are masked in-kernel
         table = jnp.pad(table, ((0, 0), (0, nblk * pb - npp)),
                         constant_values=poolmod.NO_PAGE)
@@ -253,33 +276,237 @@ def paged_attention_pallas(q, pool: PagedKV, table, cur_pos, window, *,
     return o.reshape(b, h, dh)
 
 
+def _paged_chunk_kernel(table_ref, pos_ref, win_ref, q_ref, *refs,
+                        scale, cap, quantized, pb, ps, nblk, qt, g):
+    """Chunked-prefill grid step: ``pb`` pages × a ``qt``-query tile of one
+    (sequence, kv-head) folded into the online softmax.  Rows are the
+    flattened [G, qt] query block, so with qt=1 every array and every op
+    below is the decode kernel's — a C=1 chunk is bit-identical.  refs
+    order matches `_paged_kernel`."""
+    refs = list(refs)
+    k_refs = [refs.pop(0) for _ in range(pb)]
+    v_refs = [refs.pop(0) for _ in range(pb)]
+    if quantized:
+        ks_refs = [refs.pop(0) for _ in range(pb)]
+        vs_refs = [refs.pop(0) for _ in range(pb)]
+    o_ref, m_scr, l_scr, acc_scr = refs
+    bi, qi, i = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32).reshape(g * qt, -1)  # [G*qt, Dh]
+    win = win_ref[0]
+    ks, vs, masks = [], [], []
+    for j in range(pb):                                    # static unroll
+        t = i * pb + j                                     # table index
+        kj = k_refs[j][0, 0].astype(jnp.float32)           # [ps, Dh]
+        vj = v_refs[j][0, 0].astype(jnp.float32)
+        if quantized:
+            kj = kj * ks_refs[j][0, 0]                     # per-page scale
+            vj = vj * vs_refs[j][0, 0]
+        base = t * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        tvalid = table_ref[bi, t] >= 0
+        rows = []
+        for ti in range(qt):   # in-chunk causality: each query its own cur
+            cur = pos_ref[bi, qi * qt + ti]
+            valid = tvalid & (base <= cur)
+            valid &= (win < 0) | (base > cur - win)
+            rows.append(valid)
+        ks.append(kj)
+        vs.append(vj)
+        masks.append(jnp.concatenate(rows, axis=0))        # [qt, ps]
+    k = jnp.concatenate(ks, axis=0)                        # [pb*ps, Dh]
+    v = jnp.concatenate(vs, axis=0)
+    mask = jnp.tile(jnp.concatenate(masks, axis=1), (g, 1))  # [G*qt, pb*ps]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, cap)
+    s = jnp.where(mask, s, NEG_INF)                        # [G*qt, pb*ps]
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(i == nblk - 1)
+    def _done():
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = o.reshape(g, qt, -1)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "cap", "pb", "qt",
+                                             "interpret"))
+def paged_attention_pallas_chunk(q, pool: PagedKV, table, q_pos, window, *,
+                                 scale: Optional[float] = None,
+                                 cap: Optional[float] = None,
+                                 pb: int = 2, qt: Optional[int] = None,
+                                 interpret: bool = True):
+    """Pallas chunked-prefill paged attention.  q [B, H, C, Dh] at
+    absolute positions ``q_pos`` [B, C] -> [B, H, C, Dh] f32.
+
+    Grid (B, Hkv, C/qt, nblk): each step DMAs ``pb`` pages straight from
+    the table (scalar prefetch) and folds them into the [G·qt]-row
+    online-softmax state — the chunk never materializes a dense
+    [B, P, Hkv, ps, Dh] gather.  ``qt`` must divide C (falls back to a
+    single C-wide tile otherwise)."""
+    b, h, c, dh = q.shape
+    n_pages, hkv, ps, _ = pool.k_pages.shape
+    g = h // hkv
+    npp = table.shape[1]
+    scale = (dh ** -0.5) if scale is None else scale
+    npp_b = npp_bucket(npp)
+    pb = max(1, min(pb, npp_b))
+    nblk = -(-npp_b // pb)
+    if nblk * pb != npp:   # pad table; -1 entries are masked in-kernel
+        table = jnp.pad(table, ((0, 0), (0, nblk * pb - npp)),
+                        constant_values=poolmod.NO_PAGE)
+    qt = c if qt is None or c % qt != 0 else qt
+    nq = c // qt
+    qg = q.reshape(b, hkv, g, c, dh)
+    quantized = pool.quantized
+
+    def page_map(j):
+        return lambda bi, hi, qi, i, tbl, pos, win: (
+            jnp.maximum(tbl[bi, i * pb + j], 0), hi, 0, 0)
+
+    def scale_map(j):
+        return lambda bi, hi, qi, i, tbl, pos, win: (
+            jnp.maximum(tbl[bi, i * pb + j], 0), hi)
+
+    in_specs = [pl.BlockSpec((1, 1, g, qt, dh),
+                             lambda bi, hi, qi, i, tbl, pos, win:
+                             (bi, hi, 0, qi, 0))]
+    args = [qg]
+    for j in range(pb):
+        in_specs.append(pl.BlockSpec((1, 1, ps, dh), page_map(j)))
+        args.append(pool.k_pages)
+    for j in range(pb):
+        in_specs.append(pl.BlockSpec((1, 1, ps, dh), page_map(j)))
+        args.append(pool.v_pages)
+    if quantized:
+        for j in range(pb):
+            in_specs.append(pl.BlockSpec((1, 1), scale_map(j)))
+            args.append(pool.k_scale)
+        for j in range(pb):
+            in_specs.append(pl.BlockSpec((1, 1), scale_map(j)))
+            args.append(pool.v_scale)
+    kern = functools.partial(_paged_chunk_kernel, scale=scale, cap=cap,
+                             quantized=quantized, pb=pb, ps=ps, nblk=nblk,
+                             qt=qt, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, nq, nblk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, qt, dh),
+                               lambda bi, hi, qi, i, tbl, pos, win:
+                               (bi, hi, 0, qi, 0)),
+        scratch_shapes=[pltpu.VMEM((g * qt, 1), jnp.float32),
+                        pltpu.VMEM((g * qt, 1), jnp.float32),
+                        pltpu.VMEM((g * qt, dh), jnp.float32)],
+    )
+    o = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, c, dh), jnp.float32),
+        interpret=interpret,
+    )(table, jnp.asarray(q_pos, jnp.int32),
+      jnp.asarray(window, jnp.int32).reshape(1), *args)
+    return o.reshape(b, h, c, dh)
+
+
 # ------------------------------------------------------------- dispatch
+def resolve_paged(batch: int, h: int, d_head: int, pool: PagedKV,
+                  npp: int, interpret: Optional[bool] = None):
+    """Resolve the tuned decode choice -> (impl, pb, interpret).
+
+    Pure host-side cache lookup, so shard_map wrappers can resolve with
+    the *global* geometry outside the mesh and pass (impl, pb) in
+    explicitly — mesh and single-device runs then execute the identical
+    kernel (same accumulation order, token-identical output)."""
+    from repro.kernels import ops as _ops
+    from repro.kernels import tune as _tune
+    interp = _ops.pallas_interpret() if interpret is None else interpret
+    hkv = pool.k_pages.shape[1]
+    choice = _tune.get(_tune.paged_key(hkv, h // hkv, d_head,
+                                       pool.page_size, npp, batch,
+                                       pool.quantized, interp))
+    if choice is not None:
+        return choice.impl, (choice.tile("pb") or 2), interp
+    # untuned default: native kernel on TPU, XLA on interpret hosts
+    return ("xla" if interp else "pallas"), 2, interp
+
+
+def resolve_paged_chunk(batch: int, h: int, chunk: int, d_head: int,
+                        pool: PagedKV, npp: int,
+                        interpret: Optional[bool] = None):
+    """Resolve the tuned chunk choice -> (impl, pb, qt, interpret)."""
+    from repro.kernels import ops as _ops
+    from repro.kernels import tune as _tune
+    interp = _ops.pallas_interpret() if interpret is None else interpret
+    hkv = pool.k_pages.shape[1]
+    choice = _tune.get(_tune.paged_chunk_key(hkv, h // hkv, d_head,
+                                             pool.page_size, npp, batch,
+                                             chunk, pool.quantized, interp))
+    if choice is not None:
+        return (choice.impl, (choice.tile("pb") or 2),
+                (choice.tile("qt") or chunk), interp)
+    return ("xla" if interp else "pallas"), 2, chunk, interp
+
+
 def paged_attention(q, pool: PagedKV, table, cur_pos, window, *,
                     scale: Optional[float] = None,
                     cap: Optional[float] = None,
                     impl: Optional[str] = None,
+                    pb: Optional[int] = None,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """Autotuned entry point: Pallas kernel or the XLA gather reference
-    per the kernels.tune winner for this (geometry, batch, backend)."""
-    from repro.kernels import ops as _ops
-    from repro.kernels import tune as _tune
-    interp = _ops.pallas_interpret() if interpret is None else interpret
-    pb = None
+    per the kernels.tune winner for this (geometry, batch, backend).
+    Pass ``impl``/``pb`` to pin a choice (the shard wrappers do, with the
+    globally-resolved one)."""
     if impl is None:
         b, h, dh = q.shape
-        hkv = pool.k_pages.shape[1]
-        choice = _tune.get(_tune.paged_key(
-            hkv, h // hkv, dh, pool.page_size, table.shape[1], b,
-            pool.quantized, interp))
-        if choice is not None:
-            impl = choice.impl
-            pb = choice.tile("pb")
-        else:
-            # untuned default: native kernel on TPU, XLA on interpret hosts
-            impl = "xla" if interp else "pallas"
+        impl, pb, interpret = resolve_paged(b, h, dh, pool,
+                                            table.shape[1], interpret)
+    elif interpret is None:
+        from repro.kernels import ops as _ops
+        interpret = _ops.pallas_interpret()
     if impl == "xla":
         return paged_attention_xla(q, pool, table, cur_pos, window,
                                    scale=scale, cap=cap)
     return paged_attention_pallas(q, pool, table, cur_pos, window,
                                   scale=scale, cap=cap,
-                                  pb=pb or 2, interpret=interp)
+                                  pb=pb or 2, interpret=interpret)
+
+
+def paged_attention_chunk(q, pool: PagedKV, table, q_pos, window, *,
+                          scale: Optional[float] = None,
+                          cap: Optional[float] = None,
+                          impl: Optional[str] = None,
+                          pb: Optional[int] = None,
+                          qt: Optional[int] = None,
+                          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Autotuned chunked-prefill entry point: q [B, H, C, Dh] at absolute
+    positions ``q_pos`` [B, C] -> [B, H, C, Dh].  Dispatches between
+    :func:`paged_attention_pallas_chunk` and the XLA gather reference per
+    the kernels.tune winner for this (geometry, batch, chunk, backend)."""
+    if impl is None:
+        b, h, c, dh = q.shape
+        impl, pb, qt, interpret = resolve_paged_chunk(
+            b, h, c, dh, pool, table.shape[1], interpret)
+    elif interpret is None:
+        from repro.kernels import ops as _ops
+        interpret = _ops.pallas_interpret()
+    if impl == "xla":
+        return paged_attention_xla_chunk(q, pool, table, q_pos, window,
+                                         scale=scale, cap=cap)
+    return paged_attention_pallas_chunk(q, pool, table, q_pos, window,
+                                        scale=scale, cap=cap, pb=pb or 2,
+                                        qt=qt, interpret=interpret)

@@ -165,16 +165,23 @@ def decode_attend(cache: kvc.KVCache, q, k, v, cur_pos, *, window,
 
 def decode_attend_paged(pool: kvs.PagedKV, table, q, k, v, cur_pos, *,
                         window, cap: Optional[float] = None,
-                        scale: float = 1.0, impl: Optional[str] = None):
+                        scale: float = 1.0, impl: Optional[str] = None,
+                        plan=None):
     """Paged counterpart of decode_attend: quantize-into-page update +
     page-gather attention (q/k/v are [B, H(kv), 1, Dh] as from _qkv).
-    ``impl`` overrides the tuner's kernel choice (the mesh-sharded path
-    forces the XLA gather so GSPMD can partition heads)."""
+    ``impl`` overrides the tuner's kernel choice; with a ``plan`` the
+    tuned kernel runs shard-local over the head axis via shard_map."""
     pool = kvs.update(pool, table, k[:, :, 0].astype(jnp.float32),
                       v[:, :, 0].astype(jnp.float32), cur_pos)
-    o = kvs.paged_attention(q[:, :, 0], pool, table, cur_pos,
-                            jnp.asarray(window, jnp.int32),
-                            scale=scale, cap=cap, impl=impl)
+    if impl is None and plan is not None and plan.tp > 1:
+        from repro.shard import paged_attention_sharded
+        o = paged_attention_sharded(plan, q[:, :, 0], pool, table, cur_pos,
+                                    jnp.asarray(window, jnp.int32),
+                                    scale=scale, cap=cap)
+    else:
+        o = kvs.paged_attention(q[:, :, 0], pool, table, cur_pos,
+                                jnp.asarray(window, jnp.int32),
+                                scale=scale, cap=cap, impl=impl)
     return pool, o[:, :, None, :]
 
 
@@ -205,15 +212,14 @@ def attn_decode_paged(p, pool: kvs.PagedKV, table, x, cur_pos, *,
     write-then-attend semantics as attn_decode, O(used pages) memory.
     Windowing is mask-only here; page reclamation behind an SWA window is
     the Session's host-side job (kvstore.reclaimable_prefix).  Under a
-    sharding plan the XLA gather path is forced (heads partition over
-    the model axis via GSPMD; the Pallas kernel has no partitioning
-    rule outside shard_map)."""
+    sharding plan the tuned kernel — Pallas included — runs shard-local
+    over the head axis via `shard.paged_attention_sharded` (heads are
+    independent, so mesh output is bit-identical to single-device)."""
     scale = (d_head ** -0.5) if scale is None else scale
     q, k, v = _qkv(p, x, n_heads, n_kv, d_head, cur_pos[:, None], theta,
                    plan=plan)
-    force_xla = plan is not None and plan.tp > 1
     pool, o = decode_attend_paged(pool, table, q, k, v, cur_pos,
                                   window=window, cap=cap, scale=scale,
-                                  impl="xla" if force_xla else None)
+                                  plan=plan)
     return pool, dense(_merge_heads(o.astype(COMPUTE_DTYPE)), p["wo"],
                        plan=plan)

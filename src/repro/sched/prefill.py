@@ -15,10 +15,13 @@ page by ``update(valid=...)`` and their logits ignored, so one fixed
 [B, C] shape serves every step and the step jits once per (cfg, C).
 
 Within-chunk causality needs no extra machinery: all C tokens' K/V are
-written (in position order, via a scan over `kvstore.update` — identical
-two-speed int8 semantics as decode) *before* the chunk attends, and the
-page-table index IS the absolute position, so the multi-query mask of
-`paged_attention_xla_chunk` sees in-chunk keys exactly like history.
+written (in ONE vectorized scatter, `kvstore.update_chunk` — same
+two-speed int8 semantics as decode, at chunk granularity) *before* the
+chunk attends, and the page-table index IS the absolute position, so the
+multi-query chunk mask sees in-chunk keys exactly like history.  The
+attention itself dispatches through `kvstore.paged_attention_chunk`
+(tuned Pallas chunk kernel or the XLA gather reference), shard-local
+over the head axis when a ShardingPlan is active.
 
 Scope: paged KV only (that is the point — prefill writes land in pages),
 and architectures without per-token recurrent state (rwkv6/hymba step
@@ -58,15 +61,17 @@ def _block_prefill(cfg: ArchConfig, p: Dict, st: Dict, x, positions,
                         cfg.n_kv, cfg.head_dim, positions, cfg.rope_theta,
                         plan=plan)
     pool = st["kv"]
-
-    def write(pl_, j):
-        return kvs.update(pl_, table,
-                          k[:, :, j].astype(jnp.float32),
-                          v[:, :, j].astype(jnp.float32),
-                          positions[:, j], valid=valid[:, j]), None
-
-    pool, _ = jax.lax.scan(write, pool, jnp.arange(x.shape[1]))
-    o = kvs.paged_attention_xla_chunk(q, pool, table, positions,
+    pool = kvs.update_chunk(pool, table,
+                            k.astype(jnp.float32), v.astype(jnp.float32),
+                            positions, valid=valid)
+    if plan is not None and plan.tp > 1:
+        from repro.shard import paged_attention_chunk_sharded
+        o = paged_attention_chunk_sharded(
+            plan, q, pool, table, positions,
+            jnp.asarray(window, jnp.int32),
+            scale=scale, cap=cfg.attn_softcap)
+    else:
+        o = kvs.paged_attention_chunk(q, pool, table, positions,
                                       jnp.asarray(window, jnp.int32),
                                       scale=scale, cap=cfg.attn_softcap)
     h = attn.dense(attn._merge_heads(o.astype(COMPUTE_DTYPE)),

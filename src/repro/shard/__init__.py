@@ -19,12 +19,15 @@ work, not GSPMD replication.
 `models/{layers,attention,transformer}` and `sched.prefill`; with no
 mesh every entry point behaves exactly as before (plan=None).
 """
-from repro.shard.apply import apply_fc_sharded
+from repro.shard.apply import (apply_fc_sharded,
+                               paged_attention_chunk_sharded,
+                               paged_attention_sharded)
 from repro.shard.partition import (local_view, pad_params_for_plan,
                                    prepare_params, tune_local_views)
 from repro.shard.plan import ShardingPlan, make_plan
 
 __all__ = [
     "ShardingPlan", "apply_fc_sharded", "local_view", "make_plan",
-    "pad_params_for_plan", "prepare_params", "tune_local_views",
+    "pad_params_for_plan", "paged_attention_chunk_sharded",
+    "paged_attention_sharded", "prepare_params", "tune_local_views",
 ]

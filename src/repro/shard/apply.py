@@ -22,6 +22,15 @@ Pallas fused SpMV, int8, LUT — on its local band only.  Combine policy:
 Leaves whose partition axis does not divide the tp degree fall back to
 the plain (replicated) apply — `partition.pad_params_for_plan` exists
 so that fallback never triggers for plan-prepared params.
+
+`paged_attention_sharded` / `paged_attention_chunk_sharded` do the same
+for the paged-attention kernels: the head-sharded KV pool (plan
+state_specs put Hkv over the model axis) runs the *existing* decode or
+chunk kernel shard-local — Pallas scalar-prefetch included — instead of
+forcing the XLA gather fallback.  Heads are fully independent in paged
+attention (GQA groups ride with their kv head), so with the (impl, pb,
+qt) choice resolved from the tune cache at the *global* geometry before
+entering shard_map, the mesh output is bit-identical to single-device.
 """
 from __future__ import annotations
 
@@ -133,3 +142,89 @@ def apply_fc_sharded(plan, layer: sfc.CompressedFC, x: jnp.ndarray,
                       out_specs=P(None, ax),
                       check_rep=False)(layer, x, bias_p)
     return y[:, :n_out]
+
+
+# ------------------------------------------------- paged attention (kv)
+def _pool_specs(pool, ax: str):
+    """PagedKV-shaped shard_map spec tree: pages + scales over heads."""
+    from repro.kvstore.pool import PagedKV
+    return PagedKV(
+        k_pages=P(None, ax, None, None), v_pages=P(None, ax, None, None),
+        k_scale=None if pool.k_scale is None else P(None, ax),
+        v_scale=None if pool.v_scale is None else P(None, ax))
+
+
+def _paged_shardable(plan, hkv: int) -> bool:
+    # h % tp == 0 follows from hkv % tp == 0 (GQA groups are contiguous
+    # per kv head in the [Hkv, G] head layout every kernel uses)
+    return plan is not None and plan.tp > 1 and hkv % plan.tp == 0
+
+
+def paged_attention_sharded(plan, q: jnp.ndarray, pool, table: jnp.ndarray,
+                            cur_pos: jnp.ndarray, window, *,
+                            scale: Optional[float] = None,
+                            cap: Optional[float] = None,
+                            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Decode paged attention (q [B, H, Dh]) with the KV pool head-sharded
+    over ``plan``'s model axis: each shard runs the tuned kernel on its
+    own Hkv/tp heads and local page arrays; outputs concatenate along the
+    head axis (gather combine — every head computed entirely on one
+    shard, bit-identical to single-device).  Falls back to the plain
+    dispatcher when no plan is active or heads do not divide."""
+    from repro import kvstore as kv
+    b, h, dh = q.shape
+    hkv = pool.k_pages.shape[1]
+    if not _paged_shardable(plan, hkv):
+        return kv.paged_attention(q, pool, table, cur_pos, window,
+                                  scale=scale, cap=cap, interpret=interpret)
+    # resolve with the GLOBAL geometry so every shard (and the
+    # single-device reference) executes the identical kernel
+    impl, pb, interp = kv.resolve_paged(b, h, dh, pool, table.shape[1],
+                                        interpret)
+    ax = plan.tp_axis
+
+    def local(qq, pp, tbl, pos, win):
+        return kv.paged_attention(qq, pp, tbl, pos, win, scale=scale,
+                                  cap=cap, impl=impl, pb=pb,
+                                  interpret=interp)
+
+    return shard_map(
+        local, mesh=plan.mesh,
+        in_specs=(P(None, ax, None), _pool_specs(pool, ax),
+                  P(None, None), P(None), P()),
+        out_specs=P(None, ax, None), check_rep=False)(
+            q, pool, table, cur_pos, jnp.asarray(window, jnp.int32))
+
+
+def paged_attention_chunk_sharded(plan, q: jnp.ndarray, pool,
+                                  table: jnp.ndarray, q_pos: jnp.ndarray,
+                                  window, *,
+                                  scale: Optional[float] = None,
+                                  cap: Optional[float] = None,
+                                  interpret: Optional[bool] = None
+                                  ) -> jnp.ndarray:
+    """Chunked-prefill paged attention (q [B, H, C, Dh] at positions
+    ``q_pos`` [B, C]) run shard-local over the plan's model axis — the
+    prefill-side twin of :func:`paged_attention_sharded`."""
+    from repro import kvstore as kv
+    b, h, c, dh = q.shape
+    hkv = pool.k_pages.shape[1]
+    if not _paged_shardable(plan, hkv):
+        return kv.paged_attention_chunk(q, pool, table, q_pos, window,
+                                        scale=scale, cap=cap,
+                                        interpret=interpret)
+    impl, pb, qt, interp = kv.resolve_paged_chunk(b, h, c, dh, pool,
+                                                  table.shape[1], interpret)
+    ax = plan.tp_axis
+
+    def local(qq, pp, tbl, pos, win):
+        return kv.paged_attention_chunk(qq, pp, tbl, pos, win, scale=scale,
+                                        cap=cap, impl=impl, pb=pb, qt=qt,
+                                        interpret=interp)
+
+    return shard_map(
+        local, mesh=plan.mesh,
+        in_specs=(P(None, ax, None, None), _pool_specs(pool, ax),
+                  P(None, None), P(None, None), P()),
+        out_specs=P(None, ax, None, None), check_rep=False)(
+            q, pool, table, q_pos, jnp.asarray(window, jnp.int32))

@@ -154,6 +154,118 @@ def test_pallas_softcap_and_unallocated_pages():
     np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p), atol=1e-5)
 
 
+# -------------------------------------------------- chunked prefill path
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_update_chunk_matches_scan_of_updates(kv_dtype):
+    """update_chunk (one scatter per chunk) == a scan of per-token
+    update() calls: bf16 bit-identical; int8 lands the same dequantized
+    values within the documented ~1 LSB bound (the chunk write quantizes
+    against the final page scale instead of walking per-token rescales,
+    so codes may differ by a rounding step but content may not)."""
+    B, Hkv, Dh, ps, npp, S, C = 2, 2, 8, 4, 5, 9, 4
+    rng = np.random.default_rng(5)
+    pool, table, _, _ = fill_pool(rng, B, Hkv, Dh, ps, npp, S, kv_dtype)
+    kc = jnp.asarray(rng.normal(size=(B, Hkv, C, Dh)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, Hkv, C, Dh)), jnp.float32)
+    positions = jnp.broadcast_to(
+        jnp.arange(S, S + C, dtype=jnp.int32)[None], (B, C))
+    valid = jnp.asarray([[True] * C, [True, True, False, False]])
+    scanned = pool
+    for j in range(C):
+        scanned = kvs.update(scanned, table, kc[:, :, j], vc[:, :, j],
+                             positions[:, j], valid=valid[:, j])
+    vec = kvs.update_chunk(pool, table, kc, vc, positions, valid=valid)
+    # page 0 is the garbage sink: scatter collisions land there by design
+    # (invalid/overflow tokens), its content is documented don't-care —
+    # compare real pages only
+    if kv_dtype == "bf16":
+        for a, b in ((scanned.k_pages, vec.k_pages),
+                     (scanned.v_pages, vec.v_pages)):
+            np.testing.assert_array_equal(np.asarray(a)[1:],
+                                          np.asarray(b)[1:])
+    else:
+        for pages_a, pages_b, sc_a, sc_b in (
+                (scanned.k_pages, vec.k_pages, scanned.k_scale,
+                 vec.k_scale),
+                (scanned.v_pages, vec.v_pages, scanned.v_scale,
+                 vec.v_scale)):
+            da = np.asarray(pages_a, np.float32) * \
+                np.asarray(sc_a)[:, :, None, None]
+            db = np.asarray(pages_b, np.float32) * \
+                np.asarray(sc_b)[:, :, None, None]
+            bound = 2.0 * np.maximum(np.asarray(sc_a),
+                                     np.asarray(sc_b))[:, :, None, None]
+            assert (np.abs(da - db) <= bound + 1e-7)[1:].all()
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("pb,qt", [(1, 1), (2, 2), (3, 4), (2, None)])
+@pytest.mark.parametrize("window", [-1, 5])
+def test_chunk_pallas_matches_xla(kv_dtype, pb, qt, window):
+    """Pallas chunk kernel == XLA chunk reference across page-block and
+    query-tile candidates (same tolerances as the decode kernel test:
+    online softmax vs. one-shot softmax rounding in bf16)."""
+    B, Hkv, G, Dh, ps, npp, S, C = 2, 2, 2, 16, 4, 3, 10, 4
+    rng = np.random.default_rng(6)
+    pool, table, _, _ = fill_pool(rng, B, Hkv, Dh, ps, npp, S, kv_dtype)
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, C, Dh)), jnp.float32)
+    q_pos = jnp.broadcast_to(
+        jnp.arange(S - C, S, dtype=jnp.int32)[None], (B, C))
+    o_x = kvs.paged_attention_xla_chunk(q, pool, table, q_pos, window,
+                                        cap=20.0)
+    o_p = kvs.paged_attention_pallas_chunk(q, pool, table, q_pos, window,
+                                           cap=20.0, pb=pb, qt=qt,
+                                           interpret=True)
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p),
+                               atol=2e-2 if kv_dtype == "bf16" else 1e-5,
+                               rtol=2e-2 if kv_dtype == "bf16" else 1e-5)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_chunk_c1_bit_identical_to_decode_kernel(kv_dtype):
+    """A C=1 chunk through the Pallas chunk kernel IS the decode kernel:
+    same grid arithmetic, bit-identical output."""
+    B, Hkv, G, Dh, ps, npp, S = 2, 2, 3, 16, 4, 3, 10
+    rng = np.random.default_rng(7)
+    pool, table, _, _ = fill_pool(rng, B, Hkv, Dh, ps, npp, S, kv_dtype)
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, Dh)), jnp.float32)
+    cur = jnp.full((B,), S - 1, jnp.int32)
+    for pb, window in ((1, -1), (2, 5), (4, -1)):
+        o_d = kvs.paged_attention_pallas(q, pool, table, cur, window,
+                                         pb=pb, interpret=True)
+        o_c = kvs.paged_attention_pallas_chunk(
+            q[:, :, None], pool, table, cur[:, None], window, pb=pb,
+            qt=1, interpret=True)
+        np.testing.assert_array_equal(np.asarray(o_d),
+                                      np.asarray(o_c[:, :, 0]))
+
+
+def test_chunk_dispatch_and_bucketed_key():
+    """paged_attention_chunk honors a pinned impl, and the tune key
+    buckets npp so a growing table maps to one cache entry."""
+    from repro.kernels import tune
+    B, Hkv, G, Dh, ps, npp, S, C = 1, 2, 2, 8, 4, 3, 8, 2
+    rng = np.random.default_rng(8)
+    pool, table, _, _ = fill_pool(rng, B, Hkv, Dh, ps, npp, S, "bf16")
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, C, Dh)), jnp.float32)
+    q_pos = jnp.broadcast_to(
+        jnp.arange(S - C, S, dtype=jnp.int32)[None], (B, C))
+    o_auto = kvs.paged_attention_chunk(q, pool, table, q_pos, -1,
+                                       interpret=True)
+    o_xla = kvs.paged_attention_chunk(q, pool, table, q_pos, -1,
+                                      impl="xla", interpret=True)
+    np.testing.assert_allclose(np.asarray(o_auto), np.asarray(o_xla),
+                               atol=2e-2, rtol=2e-2)
+    # npp 5..8 bucket to one key; 9 starts the next bucket
+    keys = {tune.paged_key(2, 2, 8, 4, n, 1, False, True)
+            for n in (5, 6, 7, 8)}
+    assert len(keys) == 1
+    assert tune.paged_key(2, 2, 8, 4, 9, 1, False, True) not in keys
+    ckeys = {tune.paged_chunk_key(2, 2, 8, 4, n, 1, C, False, True)
+             for n in (5, 6, 7, 8)}
+    assert len(ckeys) == 1
+
+
 def test_int8_error_bound():
     """Online requantization stays inside ~1 LSB of the final per-page
     scale (0.5 LSB base + the rescale random walk).  Dequantizes through
@@ -340,3 +452,38 @@ if HAVE_HYP:
                                   vs.transpose(1, 2, 0, 3), Dh ** -0.5,
                                   window=window)
         np.testing.assert_allclose(o, ref, atol=2e-2)
+
+    @settings(max_examples=12, deadline=None)
+    @given(ps=st.sampled_from([2, 4, 8]), S=st.integers(2, 20),
+           c=st.integers(1, 6), g=st.sampled_from([1, 2, 4]),
+           window=st.sampled_from([-1, 3, 7]),
+           cap=st.sampled_from([None, 15.0]),
+           kv_dtype=st.sampled_from(["bf16", "int8"]),
+           pb=st.sampled_from([1, 2, 4]), seed=st.integers(0, 99))
+    def test_prop_chunk_pallas_matches_xla(ps, S, c, g, window, cap,
+                                           kv_dtype, pb, seed):
+        """(C, page_size, npp, GQA group, window, softcap) sweep: the
+        Pallas chunk kernel tracks the XLA chunk reference for any
+        geometry — part-filled pages, bucket-padded tables, in-chunk
+        causality — at the decode-kernel tolerances (bf16 rounding from
+        online vs. one-shot softmax; int8 contracts in f32 either way)."""
+        c = min(c, S)
+        Hkv, Dh = 2, 8
+        npp = max(1, -(-S // ps))
+        B = 2
+        rng = np.random.default_rng(seed)
+        pool, table, _, _ = fill_pool(
+            rng, B, Hkv, Dh, ps, npp, S, kv_dtype,
+            scramble=np.random.default_rng(seed + 1))
+        q = jnp.asarray(rng.normal(size=(B, Hkv * g, c, Dh)), jnp.float32)
+        q_pos = jnp.broadcast_to(
+            jnp.arange(S - c, S, dtype=jnp.int32)[None], (B, c))
+        o_x = kvs.paged_attention_xla_chunk(q, pool, table, q_pos, window,
+                                            cap=cap)
+        o_p = kvs.paged_attention_pallas_chunk(
+            q, pool, table, q_pos, window, cap=cap, pb=pb,
+            qt=2 if c % 2 == 0 else None, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(o_x), np.asarray(o_p),
+            atol=2e-2 if kv_dtype == "bf16" else 1e-5,
+            rtol=2e-2 if kv_dtype == "bf16" else 1e-5)
